@@ -1,0 +1,50 @@
+"""Fig 11 / Fig 14 reproduction: end-to-end application speedup over BSP
+(sf-nodes in dataflow mode, everything else bulk-synchronous -- Amdahl
+effects included, e.g. DLRM's unfused feature-interaction backward)."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import design_pipeline, evaluate, select_subgraphs, v5e_mesh
+from .apps import APPS, synthesize_backward
+
+HW = v5e_mesh(8)
+
+
+def e2e(graph):
+    pg = design_pipeline(select_subgraphs(graph))
+    t_b = evaluate(pg, HW, "bsp").time
+    t_v = evaluate(pg, HW, "vertical").time
+    t_k = evaluate(pg, HW, "kitsune").time
+    return t_b / t_v, t_b / t_k
+
+
+def main(csv=True):
+    inf, tr = [], []
+    for name, make in APPS.items():
+        t0 = time.perf_counter_ns()
+        sv, sk = e2e(make())
+        us = (time.perf_counter_ns() - t0) / 1e3
+        inf.append(sk)
+        if csv:
+            print(f"e2e_{name}_inf,{us:.0f},vertical={sv:.2f};kitsune={sk:.2f}")
+        if name == "llama_tok":
+            continue
+        sv_t, sk_t = e2e(synthesize_backward(make()))
+        tr.append(sk_t)
+        if csv:
+            print(f"e2e_{name}_train,0,vertical={sv_t:.2f};kitsune={sk_t:.2f}")
+    gm_i = math.exp(sum(math.log(max(x, 1e-9)) for x in inf) / len(inf))
+    gm_t = math.exp(sum(math.log(max(x, 1e-9)) for x in tr) / len(tr))
+    # paper: inference e2e geomean ~1.5x (1.3-2.3x); training 1.1-2.4x
+    assert 1.0 <= gm_i <= 2.6, gm_i
+    assert 1.0 <= gm_t <= 2.6, gm_t
+    if csv:
+        print(f"e2e_geomean,0,inference={gm_i:.2f};training={gm_t:.2f}"
+              f";paper_inf=1.3-2.3;paper_train=1.1-2.4")
+    return gm_i, gm_t
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md SS Roofline):
+per (arch x shape): the three terms, dominant bottleneck, useful-FLOPs
+ratio, and roofline fraction.  Reads experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load(mesh="single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main(csv=True):
+    rows = load("single")
+    if not rows:
+        print("roofline_table,0,no_dryrun_artifacts_yet")
+        return []
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        rf = r["roofline"]
+        if csv:
+            print(f"roofline_{r['arch']}_{r['shape']},0,"
+                  f"compute_s={rf['compute_s']:.3e}"
+                  f";memory_s={rf['memory_s']:.3e}"
+                  f";collective_s={rf['collective_s']:.3e}"
+                  f";dominant={rf['dominant']}"
+                  f";useful_ratio={rf['useful_flops_ratio']:.2f}"
+                  f";roofline_frac={rf['roofline_fraction']:.3f}"
+                  f";fits={r['memory']['fits_16GiB']}")
+    n_fail = len(rows) - len(ok)
+    if csv:
+        print(f"roofline_summary,0,cells={len(rows)};ok={len(ok)}"
+              f";failed={n_fail}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper SS6 sensitivity study: 2x on-chip compute and 2x on-chip (L2/VMEM)
+bandwidth, with DRAM bandwidth FIXED (the expensive resource).  The paper's
+claim: Kitsune converts cheap-resource scaling into speedup (47% inference /
+27% training) while BSP only gains 18-26%."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import design_pipeline, evaluate, select_subgraphs, v5e_mesh
+from .apps import APPS, synthesize_backward
+
+HW = v5e_mesh(8)
+HW2 = HW.scaled(compute=2.0, onchip=2.0)   # DRAM fixed
+
+
+def gains(graph):
+    pg = design_pipeline(select_subgraphs(graph))
+    out = {}
+    for mode in ("bsp", "kitsune"):
+        t1 = evaluate(pg, HW, mode).time
+        t2 = evaluate(pg, HW2, mode).time
+        out[mode] = t1 / t2 - 1.0
+    return out
+
+
+def main(csv=True):
+    rows = {}
+    for name, make in APPS.items():
+        t0 = time.perf_counter_ns()
+        gi = gains(make())
+        us = (time.perf_counter_ns() - t0) / 1e3
+        rows[(name, "inf")] = gi
+        if csv:
+            print(f"sensitivity_{name}_inf,{us:.0f},"
+                  f"bsp_gain={gi['bsp']:.2f};kitsune_gain={gi['kitsune']:.2f}")
+        if name == "llama_tok":
+            continue
+        gt = gains(synthesize_backward(make()))
+        rows[(name, "train")] = gt
+        if csv:
+            print(f"sensitivity_{name}_train,0,"
+                  f"bsp_gain={gt['bsp']:.2f};kitsune_gain={gt['kitsune']:.2f}")
+    # direction check: Kitsune must benefit at least as much as BSP on avg
+    k = sum(r["kitsune"] for r in rows.values()) / len(rows)
+    b = sum(r["bsp"] for r in rows.values()) / len(rows)
+    assert k >= b - 1e-9, (k, b)
+    if csv:
+        print(f"sensitivity_mean,0,kitsune={k:.2f};bsp={b:.2f}"
+              f";paper_kitsune=0.27-0.47;paper_bsp=0.18-0.26")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

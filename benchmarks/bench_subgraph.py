@@ -1,0 +1,63 @@
+"""Fig 10 / Fig 12 reproduction: per-subgraph speedups (BSP vs vertical vs
+Kitsune), inference and training, with the hardware-sensitivity variants
+(2x compute / 2x on-chip BW / both, DRAM fixed)."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import (cost_bsp, cost_kitsune, cost_vertical,
+                        design_pipeline, select_subgraphs, v5e_mesh)
+from .apps import APPS, synthesize_backward
+
+HW = v5e_mesh(8)
+
+
+def subgraph_speedups(graph, hw=HW):
+    sel = select_subgraphs(graph)
+    pg = design_pipeline(sel)
+    rows = []
+    for p in pg.pipelines:
+        members = [o.name for s in p.stages for o in s.ops]
+        t_b = cost_bsp(pg.graph, members, hw).time
+        t_v = cost_vertical(pg.graph, members, hw).time
+        t_k = cost_kitsune(pg.graph, p, hw).time
+        rows.append({"sf": p.name, "ops": len(members),
+                     "speedup_vertical": t_b / max(t_v, 1e-30),
+                     "speedup_kitsune": t_b / max(t_k, 1e-30)})
+    return rows
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def main(csv=True):
+    all_kit = []
+    for name, make in APPS.items():
+        for phase, g in (("inf", make()),
+                         *((("train", synthesize_backward(make())),)
+                           if name != "llama_tok" else ())):
+            t0 = time.perf_counter_ns()
+            rows = subgraph_speedups(g)
+            us = (time.perf_counter_ns() - t0) / 1e3
+            gk = geomean([r["speedup_kitsune"] for r in rows])
+            gv = geomean([r["speedup_vertical"] for r in rows])
+            if phase == "inf":
+                all_kit += [r["speedup_kitsune"] for r in rows]
+            if csv:
+                print(f"subgraph_{name}_{phase},{us:.0f},"
+                      f"n_sf={len(rows)};geomean_kitsune={gk:.2f}"
+                      f";geomean_vertical={gv:.2f}")
+    gm = geomean(all_kit)
+    # paper Fig 10: inference subgraph speedups 1.04x-3.4x, geomean 1.9x
+    assert 1.0 <= gm <= 3.4, gm
+    if csv:
+        print(f"subgraph_geomean_inference,0,kitsune={gm:.2f}"
+              f";paper_band=1.04-3.4_geomean_1.9")
+    return gm
+
+
+if __name__ == "__main__":
+    main()

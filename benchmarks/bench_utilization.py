@@ -1,0 +1,42 @@
+"""Fig 3 / Fig 13 reproduction: share of runtime spent in the four
+(compute-util x DRAM-util) quadrants, BSP vs Kitsune (low = <33% of peak)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (design_pipeline, select_subgraphs,
+                        utilization_quadrants, v5e_mesh)
+from .apps import APPS, synthesize_backward
+
+HW = v5e_mesh(8)
+
+
+def main(csv=True):
+    both_low = {"bsp": [], "kitsune": []}
+    for name, make in APPS.items():
+        graphs = {"inf": make()}
+        if name != "llama_tok":
+            graphs["train"] = synthesize_backward(make())
+        for phase, g in graphs.items():
+            pg = design_pipeline(select_subgraphs(g))
+            t0 = time.perf_counter_ns()
+            q_b = utilization_quadrants(pg, HW, "bsp")
+            q_k = utilization_quadrants(pg, HW, "kitsune")
+            us = (time.perf_counter_ns() - t0) / 1e3
+            both_low["bsp"].append(q_b["both_low"])
+            both_low["kitsune"].append(q_k["both_low"])
+            if csv:
+                print(f"util_{name}_{phase},{us:.0f},"
+                      f"bsp_both_low={q_b['both_low']:.2f}"
+                      f";kitsune_both_low={q_k['both_low']:.2f}"
+                      f";kitsune_low_dram={q_k['low_dram']:.2f}")
+    mb = sum(both_low["bsp"]) / len(both_low["bsp"])
+    mk = sum(both_low["kitsune"]) / len(both_low["kitsune"])
+    assert mk <= mb + 1e-9   # paper: Kitsune cuts low-utilization time
+    if csv:
+        print(f"util_mean_both_low,0,bsp={mb:.2f};kitsune={mk:.2f}")
+    return mb, mk
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark driver: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_coverage, bench_e2e, bench_kernels, bench_queue,
+                   bench_roofline, bench_sensitivity, bench_subgraph,
+                   bench_utilization)
+    sections = [
+        ("Fig5_queue_bandwidth", bench_queue.main),
+        ("Table2_coverage_traffic", bench_coverage.main),
+        ("Fig10_12_subgraph_speedups", bench_subgraph.main),
+        ("Fig11_14_e2e_speedups", bench_e2e.main),
+        ("Fig10_sensitivity", bench_sensitivity.main),
+        ("Fig3_13_utilization", bench_utilization.main),
+        ("kernel_benchmarks", bench_kernels.main),
+        ("roofline_table", bench_roofline.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        print(f"# === {name} ===")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 -- report, keep going
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED sections: {failed}")
+        sys.exit(1)
+    print("# all benchmark sections passed")
+
+
+if __name__ == "__main__":
+    main()

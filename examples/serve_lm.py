@@ -1,0 +1,43 @@
+"""Batched serving driver: continuous-batching engine over a small LM.
+
+    python -m examples.serve_lm        (PYTHONPATH=src)
+
+Demonstrates: prefill-free slot admission (prompts teacher-forced through
+the decode path), KV-cache decode, slot refill, greedy determinism.
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    cfg = get_config("gemma3-1b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=48, batch=4),
+                        eos_id=-1)
+    prompts = {i: [3 + i, 17, 5] for i in range(10)}   # 10 requests, 4 slots
+    for rid, p in prompts.items():
+        eng.submit(rid, p)
+    t0 = time.time()
+    ticks = 0
+    while eng.tick() > 0:
+        ticks += 1
+        if ticks > 2000:
+            raise RuntimeError("serving did not drain")
+    dt = time.time() - t0
+    done = eng.done
+    total_tokens = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests, {total_tokens} tokens, "
+          f"{ticks} ticks in {dt:.1f}s "
+          f"({total_tokens / dt:.0f} tok/s on CPU)")
+    assert len(done) == 10 and all(len(v) > 0 for v in done.values())
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

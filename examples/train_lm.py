@@ -1,0 +1,97 @@
+"""End-to-end training driver: a ~100M-param gemma3-family model trained for
+a few hundred steps on the synthetic pipeline, with checkpoint/restart
+supervision and straggler monitoring.
+
+    python -m examples.train_lm --steps 300        (PYTHONPATH=src)
+
+Demonstrates: config system -> model zoo -> data pipeline -> train step
+(remat + chunked xent) -> AdamW + cosine schedule -> Checkpointer +
+Supervisor (a failure is INJECTED at step 120 to prove restart works) ->
+StragglerMonitor.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import adamw, cosine_schedule
+from repro.runtime import FailureInjector, StragglerMonitor, Supervisor
+from repro.train import TrainConfig, make_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--full", action="store_true",
+                    help="the full ~100M-param config (hours on CPU; sized "
+                         "for a single accelerator)")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    if args.full:
+        # ~100M params: gemma3 family at width 512 / 6 layers / real vocab
+        cfg = dataclasses.replace(
+            get_config(args.arch).reduced(),
+            name="gemma3-100m", n_layers=6, d_model=512, n_heads=8,
+            n_kv_heads=2, head_dim=64, d_ff=2048, vocab=64000,
+            dtype="float32", window=64, window_pattern="LLLLLG")
+    else:
+        # CPU-sized default (same family/code path; ~6M params)
+        cfg = dataclasses.replace(
+            get_config(args.arch).reduced(),
+            name="gemma3-6m", n_layers=4, d_model=256, n_heads=4,
+            n_kv_heads=2, head_dim=64, d_ff=1024, vocab=2048,
+            dtype="float32", window=32, window_pattern="LLLG")
+    print(f"arch {cfg.name}: {cfg.param_count() / 1e6:.0f}M params")
+
+    opt = adamw(cosine_schedule(1.5e-3, warmup=10, total=args.steps))
+    step_fn = jax.jit(make_train_step(cfg, opt, TrainConfig(remat=True)))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    ckdir = f"{args.ckpt}/{cfg.name}-v{cfg.vocab}"
+    ck = Checkpointer(ckdir, keep=2)
+    sup = Supervisor(ck, checkpoint_every=50, max_restarts=2,
+                     heartbeat_path=ckdir + "/heartbeat")
+    mon = StragglerMonitor(window=16)
+    losses = []
+
+    def init_state():
+        return make_train_state(cfg, opt, jax.random.PRNGKey(0))
+
+    def one_step(state, step):
+        t0 = time.time()
+        batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+        state, m = step_fn(state, batch)
+        loss = float(m["loss"])
+        losses.append((step, loss))
+        act = mon.record(time.time() - t0)
+        if act:
+            print(f"  [straggler] {act}")
+        if step % 25 == 0:
+            print(f"  step {step:4d} loss {loss:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        return state
+
+    injector = FailureInjector(fail_at={args.steps // 2})
+    state, report = sup.run(init_state=init_state, step_fn=one_step,
+                            n_steps=args.steps, injector=injector)
+    first = losses[0][1]
+    last = sum(l for _, l in losses[-10:]) / 10
+    print(f"done: restarts={report['restarts']} "
+          f"(restored from {report['restored_from']}), "
+          f"loss {first:.3f} -> {last:.3f}")
+    assert report["restarts"] == 1, "injected failure must trigger restart"
+    assert last < first - 0.3, "loss must improve"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, restore_with_resharding
+
+__all__ = ["Checkpointer", "restore_with_resharding"]

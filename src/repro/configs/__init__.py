@@ -1,0 +1,23 @@
+"""Architecture registry: --arch <id> resolution for launchers/benchmarks."""
+from .base import ArchConfig, InputShape, SHAPES, applicable_shapes
+
+from . import (gemma3_1b, grok1_314b, hymba_1_5b, llama4_maverick_400b,
+               phi3_medium_14b, pixtral_12b, qwen15_32b, whisper_small,
+               xlstm_350m, yi_34b)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (gemma3_1b, qwen15_32b, phi3_medium_14b, yi_34b, pixtral_12b,
+              grok1_314b, llama4_maverick_400b, hymba_1_5b, whisper_small,
+              xlstm_350m)
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "InputShape", "SHAPES", "ARCHS", "get_config",
+           "applicable_shapes"]

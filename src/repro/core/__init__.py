@@ -1,0 +1,32 @@
+"""Kitsune-on-TPU core: operator-graph IR, compiler passes, queues, cost model.
+
+Pipeline (paper SS5):  Graph -> select_subgraphs -> design_pipeline -> balance
+                       -> executor / kernels.
+"""
+from .graph import Graph, Node, TensorSpec, MXU, VPU
+from .patterns import select_subgraphs, Selection, SfNode, PATTERN_LIBRARY
+from .pipeline import design_pipeline, PipelinedGraph, Pipeline, Stage, QueueSpec
+from .balance import solve_allocation, balance, BalanceResult
+from .costmodel import (
+    A100, V5E, HwSpec, v5e_mesh, evaluate, cost_bsp, cost_vertical,
+    cost_kitsune, roofline, RooflineTerms, utilization_quadrants,
+    PEAK_FLOPS_PER_CHIP, HBM_BW_PER_CHIP, ICI_BW_PER_LINK,
+)
+from .queue import (
+    queue_bandwidth, VMEM_QUEUE, ICI_QUEUE, L2_QUEUE_A100,
+    spatial_pipeline, make_spatial_pipeline, ring_push,
+)
+from .executor import GraphExecutor, init_params, compare_traffic
+
+__all__ = [
+    "Graph", "Node", "TensorSpec", "MXU", "VPU",
+    "select_subgraphs", "Selection", "SfNode", "PATTERN_LIBRARY",
+    "design_pipeline", "PipelinedGraph", "Pipeline", "Stage", "QueueSpec",
+    "solve_allocation", "balance", "BalanceResult",
+    "A100", "V5E", "HwSpec", "v5e_mesh", "evaluate", "cost_bsp",
+    "cost_vertical", "cost_kitsune", "roofline", "RooflineTerms",
+    "utilization_quadrants",
+    "queue_bandwidth", "VMEM_QUEUE", "ICI_QUEUE", "L2_QUEUE_A100",
+    "spatial_pipeline", "make_spatial_pipeline", "ring_push",
+    "GraphExecutor", "init_params", "compare_traffic",
+]

@@ -1,0 +1,249 @@
+"""Operator dataflow-graph IR for the Kitsune compiler.
+
+This is the TPU-side analogue of the operator graphs Kitsune extracts with
+PyTorch Dynamo (paper SS5): a small, explicit DAG of DL operators with enough
+metadata (shapes, FLOPs, bytes, resource class) for subgraph selection
+(patterns.py), pipeline design (pipeline.py / Algorithm 1) and ILP load
+balancing (balance.py / Algorithm 2).
+
+Nodes are kept in topological (insertion) order -- the paper's pattern
+matching operates on exactly this linearization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+# Resource classes: the paper's SIMT vs TENSOR CTA types map to the TPU's
+# VPU (vector unit) vs MXU (matrix unit) issue pipelines.
+MXU = "MXU"
+VPU = "VPU"
+
+# Op kinds understood by the pattern library / executor.
+OP_KINDS = (
+    "input", "const",
+    "linear",        # GEMM (+optional bias): MXU
+    "matmul",        # raw GEMM: MXU
+    "attention",     # fused attention block (MXU-dominant)
+    "conv",          # convolution (MXU; modeled as GEMM)
+    "elementwise",   # add/mul/activations: VPU
+    "norm",          # layernorm / rmsnorm: VPU
+    "softmax",       # VPU
+    "reduce",        # sum/mean over an axis: VPU
+    "reduce_partial",  # fan-in stage of a split reduction (Algorithm 1)
+    "reduce_final",    # final stage of a split reduction
+    "gather",        # embedding lookup / index -- excluded from sf-nodes (paper SS5.1)
+    "scatter",       # excluded
+    "concat",        # VPU
+    "reshape",       # free
+    "queue",         # inserted by pipeline design; carries tiles on-chip
+    "output",
+)
+
+_MXU_KINDS = {"linear", "matmul", "attention", "conv"}
+_FREE_KINDS = {"input", "const", "reshape", "output", "queue"}
+
+
+def _nbytes(shape: tuple[int, ...], dtype: str) -> int:
+    itemsize = np.dtype(dtype if dtype != "bfloat16" else np.uint16).itemsize
+    return int(math.prod(shape)) * itemsize
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    shape: tuple[int, ...]
+    dtype: str = "bfloat16"
+
+    @property
+    def nbytes(self) -> int:
+        return _nbytes(self.shape, self.dtype)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass
+class Node:
+    name: str
+    kind: str
+    inputs: list[str] = field(default_factory=list)
+    out: TensorSpec = TensorSpec((1,))
+    flops: float = 0.0
+    # Bytes of non-graph operands this node reads from HBM (weights/params).
+    weight_bytes: float = 0.0
+    attrs: dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in OP_KINDS:
+            raise ValueError(f"unknown op kind {self.kind!r}")
+
+    @property
+    def resource(self) -> str:
+        return MXU if self.kind in _MXU_KINDS else VPU
+
+    @property
+    def is_free(self) -> bool:
+        return self.kind in _FREE_KINDS
+
+
+class Graph:
+    """A DAG of Nodes in topological (insertion) order."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.nodes: dict[str, Node] = {}
+
+    # -- construction -----------------------------------------------------
+    def add(self, node: Node) -> Node:
+        if node.name in self.nodes:
+            raise ValueError(f"duplicate node {node.name}")
+        for i in node.inputs:
+            if i not in self.nodes:
+                raise ValueError(f"node {node.name} references unknown input {i}")
+        self.nodes[node.name] = node
+        return node
+
+    # Convenience constructors with FLOP/byte accounting. ----------------
+    def input(self, name: str, shape: Iterable[int], dtype: str = "bfloat16") -> Node:
+        return self.add(Node(name, "input", [], TensorSpec(tuple(shape), dtype)))
+
+    def linear(self, name: str, x: str, d_out: int, *, bias: bool = False,
+               dtype: str | None = None) -> Node:
+        xs = self.nodes[x].out
+        d_in = xs.shape[-1]
+        m = int(math.prod(xs.shape[:-1]))
+        out = TensorSpec(xs.shape[:-1] + (d_out,), dtype or xs.dtype)
+        wbytes = _nbytes((d_in, d_out), out.dtype) + (_nbytes((d_out,), out.dtype) if bias else 0)
+        flops = 2.0 * m * d_in * d_out + (m * d_out if bias else 0)
+        return self.add(Node(name, "linear", [x], out, flops, wbytes,
+                             {"d_in": d_in, "d_out": d_out, "bias": bias}))
+
+    def matmul(self, name: str, a: str, b: str) -> Node:
+        sa, sb = self.nodes[a].out, self.nodes[b].out
+        m = int(math.prod(sa.shape[:-1]))
+        k = sa.shape[-1]
+        n = sb.shape[-1]
+        out = TensorSpec(sa.shape[:-1] + (n,), sa.dtype)
+        return self.add(Node(name, "matmul", [a, b], out, 2.0 * m * k * n))
+
+    def elementwise(self, name: str, xs: list[str], fn: str = "add",
+                    flop_per_elem: float = 1.0) -> Node:
+        out = self.nodes[xs[0]].out
+        return self.add(Node(name, "elementwise", list(xs), out,
+                             flop_per_elem * out.size, 0.0, {"fn": fn}))
+
+    def norm(self, name: str, x: str, kind: str = "rmsnorm") -> Node:
+        out = self.nodes[x].out
+        wbytes = _nbytes((out.shape[-1],), out.dtype)
+        return self.add(Node(name, "norm", [x], out, 4.0 * out.size, wbytes, {"norm": kind}))
+
+    def softmax(self, name: str, x: str) -> Node:
+        out = self.nodes[x].out
+        return self.add(Node(name, "softmax", [x], out, 5.0 * out.size))
+
+    def reduce(self, name: str, x: str, axis: int, keepdims: bool = False) -> Node:
+        xs = self.nodes[x].out
+        shape = list(xs.shape)
+        red = shape[axis]
+        if keepdims:
+            shape[axis] = 1
+        else:
+            shape.pop(axis % len(shape))
+        out = TensorSpec(tuple(shape), xs.dtype)
+        return self.add(Node(name, "reduce", [x], out, float(xs.size),
+                             0.0, {"axis": axis, "red_size": red}))
+
+    def attention(self, name: str, q: str, k: str, v: str, *,
+                  causal: bool = True, window: int | None = None) -> Node:
+        qs, ks = self.nodes[q].out, self.nodes[k].out
+        # shapes: (B, H, S, D) -- FLOPs = 2*B*H*S*S'*D * 2 (QK^T and PV)
+        b, h, s, d = qs.shape
+        skv = ks.shape[2]
+        eff = min(window, skv) if window else skv
+        frac = 0.5 if (causal and not window) else 1.0
+        flops = 2 * 2.0 * b * h * s * eff * d * frac
+        out = TensorSpec(qs.shape, qs.dtype)
+        return self.add(Node(name, "attention", [q, k, v], out, flops,
+                             0.0, {"causal": causal, "window": window}))
+
+    def gather(self, name: str, table_shape: tuple[int, int], idx: str,
+               dtype: str = "bfloat16") -> Node:
+        xs = self.nodes[idx].out
+        out = TensorSpec(xs.shape + (table_shape[1],), dtype)
+        return self.add(Node(name, "gather", [idx], out, 0.0,
+                             _nbytes(table_shape, dtype), {"table": table_shape}))
+
+    def concat(self, name: str, xs: list[str], axis: int = -1) -> Node:
+        specs = [self.nodes[x].out for x in xs]
+        shape = list(specs[0].shape)
+        shape[axis] = sum(s.shape[axis] for s in specs)
+        return self.add(Node(name, "concat", list(xs), TensorSpec(tuple(shape), specs[0].dtype),
+                             0.0, 0.0, {"axis": axis}))
+
+    def output(self, name: str, x: str) -> Node:
+        return self.add(Node(name, "output", [x], self.nodes[x].out))
+
+    # -- structure queries -------------------------------------------------
+    def topo(self) -> list[Node]:
+        return list(self.nodes.values())
+
+    def consumers(self, name: str) -> list[Node]:
+        return [n for n in self.nodes.values() if name in n.inputs]
+
+    def successors_map(self) -> dict[str, list[str]]:
+        succ: dict[str, list[str]] = {k: [] for k in self.nodes}
+        for n in self.nodes.values():
+            for i in n.inputs:
+                succ[i].append(n.name)
+        return succ
+
+    def is_contiguous(self, members: set[str]) -> bool:
+        """Contiguity per Tarnawski et al. [47]: no path leaves the subgraph
+        and re-enters it through an external node."""
+        succ = self.successors_map()
+        # External frontier reachable from members without passing through members.
+        frontier = []
+        for m in members:
+            frontier += [s for s in succ[m] if s not in members]
+        seen: set[str] = set()
+        while frontier:
+            u = frontier.pop()
+            if u in seen:
+                continue
+            seen.add(u)
+            for s in succ[u]:
+                if s in members:
+                    return False  # re-entered
+                if s not in seen:
+                    frontier.append(s)
+        return True
+
+    # -- aggregate stats ---------------------------------------------------
+    def total_flops(self) -> float:
+        return sum(n.flops for n in self.nodes.values())
+
+    def intermediate_bytes(self) -> float:
+        """Bytes of intermediate tensors written+read through HBM under BSP."""
+        total = 0.0
+        for n in self.nodes.values():
+            if n.kind in ("input", "output", "const"):
+                continue
+            ncons = len(self.consumers(n.name))
+            if ncons > 0:
+                total += n.out.nbytes * (1 + ncons)  # one write + reads
+        return total
+
+    def clone(self) -> "Graph":
+        g = Graph(self.name)
+        for n in self.nodes.values():
+            g.nodes[n.name] = dataclasses.replace(
+                n, inputs=list(n.inputs), attrs=dict(n.attrs))
+        return g
+
+    def __repr__(self):
+        return f"Graph({self.name}, {len(self.nodes)} nodes)"

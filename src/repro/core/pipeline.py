@@ -1,0 +1,195 @@
+"""Pipeline design (paper SS5.2, Algorithm 1).
+
+Transforms each selected sf-node into a spatial pipeline:
+
+  1. SplitReduction  -- reduction nodes become a parallel fan-in stage plus a
+     final combining stage (the paper's queue-based reduction tree; on TPU the
+     fan-in maps to grid/mesh-parallel partial reductions and the final stage
+     to a queue_reduce combine).
+  2. CreateQueue     -- every intermediate produced and consumed inside the
+     sf-node gets an on-chip tile queue node between producer and consumers
+     (double-buffered; VMEM intra-chip, ICI ring inter-chip).
+  3. Epilogue fusion -- trivially-fusable (elementwise/norm directly after a
+     GEMM with a single consumer) collapse into the producer stage, exactly
+     like vertical fusion does *within* one pipeline stage.
+
+Output: a PipelinedGraph whose stages are the load-balancing units for
+Algorithm 2 (balance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+from .graph import MXU, VPU, Graph, Node, TensorSpec
+from .patterns import Selection, SfNode
+
+# Default on-chip queue payload: a (128 x 256) bf16 tile = 64 KiB -- the
+# paper's measured sweet spot for queue bandwidth (SS4.1, Fig 5).
+DEFAULT_TILE_BYTES = 64 * 1024
+QUEUE_DEPTH = 2  # double buffering, as in the paper's Fig 4
+
+# Reductions wider than this get split into fan-in + final stages.
+SPLIT_REDUCTION_MIN = 8
+
+
+@dataclass
+class QueueSpec:
+    name: str
+    producer: str
+    consumers: list[str]
+    payload_bytes: int = DEFAULT_TILE_BYTES
+    depth: int = QUEUE_DEPTH
+    level: str = "vmem"  # "vmem" (intra-chip) | "ici" (inter-chip ring)
+    total_bytes: float = 0.0  # total intermediate volume routed through queue
+
+
+@dataclass
+class Stage:
+    """One pipeline stage: >=1 fused ops executing on one resource class."""
+    name: str
+    ops: list[Node]
+    resource: str  # MXU | VPU
+
+    @property
+    def flops(self) -> float:
+        return sum(n.flops for n in self.ops)
+
+    @property
+    def weight_bytes(self) -> float:
+        return sum(n.weight_bytes for n in self.ops)
+
+    @property
+    def out(self) -> TensorSpec:
+        return self.ops[-1].out
+
+
+@dataclass
+class Pipeline:
+    """A pipelined sf-node: stages + queues, ready for load balancing."""
+    name: str
+    stages: list[Stage]
+    queues: list[QueueSpec]
+    sf: SfNode
+    # Edges: stage name -> list of downstream stage names (via queues).
+    edges: dict[str, list[str]] = field(default_factory=dict)
+
+    def stage_by_op(self, op_name: str) -> Stage | None:
+        for s in self.stages:
+            if any(o.name == op_name for o in s.ops):
+                return s
+        return None
+
+
+@dataclass
+class PipelinedGraph:
+    graph: Graph
+    pipelines: list[Pipeline]
+
+    @property
+    def n_queues(self) -> int:
+        return sum(len(p.queues) for p in self.pipelines)
+
+
+def _split_reduction(g: Graph, n: Node, fanin: int) -> tuple[Node, Node]:
+    """Algorithm 1 lines 2-6: replace reduction with fan-in + final stages."""
+    partial = dataclasses.replace(
+        n, name=n.name + ".fanin", kind="reduce_partial",
+        flops=n.flops,  # the element visits happen in the fan-in stage
+        attrs={**n.attrs, "fanin": fanin})
+    final = dataclasses.replace(
+        n, name=n.name + ".final", kind="reduce_final",
+        inputs=[partial.name],
+        flops=float(fanin * n.out.size),  # combine partials
+        attrs={**n.attrs, "fanin": fanin})
+    # splice into the graph preserving order
+    new_nodes: dict[str, Node] = {}
+    for name, node in g.nodes.items():
+        if name == n.name:
+            new_nodes[partial.name] = partial
+            new_nodes[final.name] = final
+        else:
+            node.inputs = [final.name if i == n.name else i for i in node.inputs]
+            new_nodes[name] = node
+    g.nodes = new_nodes
+    return partial, final
+
+
+def _is_epilogue_fusable(prod: Node, cons: Node, n_consumers: int) -> bool:
+    """Trivially fusable: cheap VPU op directly after a GEMM, sole consumer."""
+    return (prod.resource == MXU and cons.kind in ("elementwise", "norm", "softmax", "reshape")
+            and n_consumers == 1)
+
+
+def design_pipeline(selection: Selection,
+                    tile_bytes: int = DEFAULT_TILE_BYTES,
+                    split_reduction_min: int = SPLIT_REDUCTION_MIN) -> PipelinedGraph:
+    """Algorithm 1 over every sf-node of the selection."""
+    g = selection.graph.clone()
+    pipelines: list[Pipeline] = []
+
+    for sf in selection.sf_nodes:
+        members = list(sf.members)
+        # --- step 1: SplitReduction ------------------------------------
+        for m in list(members):
+            n = g.nodes.get(m)
+            if n is None or n.kind != "reduce":
+                continue
+            if n.attrs.get("red_size", 0) >= split_reduction_min:
+                partial, final = _split_reduction(g, n, fanin=min(
+                    int(math.sqrt(n.attrs["red_size"])), 16))
+                idx = members.index(m)
+                members[idx:idx + 1] = [partial.name, final.name]
+
+        mset = set(members)
+
+        # --- step 3 (done first so queues connect *stages*): epilogue fusion
+        stages: list[Stage] = []
+        op_to_stage: dict[str, Stage] = {}
+        for m in members:
+            n = g.nodes[m]
+            cons = g.consumers(n.name)
+            fused = False
+            # fuse into producer stage if trivially fusable
+            for i in n.inputs:
+                if i in op_to_stage:
+                    prod_stage = op_to_stage[i]
+                    prod_tail = prod_stage.ops[-1]
+                    if _is_epilogue_fusable(prod_tail, n, len(g.consumers(i))):
+                        prod_stage.ops.append(n)
+                        op_to_stage[n.name] = prod_stage
+                        fused = True
+                        break
+            if not fused:
+                st = Stage(f"{sf.name}.s{len(stages)}", [n], n.resource)
+                stages.append(st)
+                op_to_stage[n.name] = st
+
+        # --- step 2: CreateQueue for intra-sf intermediates --------------
+        queues: list[QueueSpec] = []
+        edges: dict[str, list[str]] = {s.name: [] for s in stages}
+        for m in members:
+            n = g.nodes[m]
+            cons = [c for c in g.consumers(n.name)]
+            internal = [c for c in cons if c.name in mset]
+            if not internal:
+                continue
+            src = op_to_stage[n.name]
+            dsts = {op_to_stage[c.name].name for c in internal
+                    if op_to_stage[c.name] is not src}
+            if not dsts:
+                continue  # consumer fused into same stage: register/VMEM local
+            q = QueueSpec(
+                name=f"{sf.name}.q{len(queues)}",
+                producer=src.name,
+                consumers=sorted(dsts),
+                payload_bytes=tile_bytes,
+                total_bytes=float(n.out.nbytes),
+            )
+            queues.append(q)
+            edges[src.name] = sorted(set(edges[src.name]) | dsts)
+
+        pipelines.append(Pipeline(sf.name, stages, queues, sf, edges))
+
+    return PipelinedGraph(g, pipelines)

@@ -1,0 +1,11 @@
+"""Dataflow Pallas kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+models consume ops.py so one KernelConfig flag flips the implementation.
+"""
+from .ops import (KernelConfig, attention, decode_attention, mlp, mlp_swiglu,
+                  reduce)
+from .flash_attention import combine_partials
+
+__all__ = ["KernelConfig", "attention", "decode_attention", "mlp",
+           "mlp_swiglu", "reduce", "combine_partials"]

@@ -1,0 +1,228 @@
+"""Dataflow-fused MLP Pallas kernel -- the paper's Fig 2(a) pattern on TPU.
+
+    Y = act(X @ W1) @ W2            (gelu / relu)
+    Y = (silu(X @ Wg) * (X @ Wu)) @ Wd   (SwiGLU)
+
+Kitsune's point: under BSP (and under vertical fusion once the hidden dim
+exceeds on-chip capacity) the (M, H) intermediate round-trips through
+DRAM/HBM.  Here the hidden dimension is *spatially split* over the Pallas
+grid: each grid step materializes only a (block_m, block_h) hidden tile in
+VMEM -- the on-chip queue payload -- consumes it immediately into the second
+GEMM, and accumulates into a VMEM f32 scratch.  The (M, H) tensor never
+exists in HBM.  MXU (two GEMMs) and VPU (activation) work interleave inside
+one program, which is the TPU realization of the paper's heterogeneous-CTA
+co-execution (DESIGN.md SS2 assumption 2).
+
+HBM traffic: read X, W1, W2 (, Wu) once; write Y once.  BSP traffic adds
+2 * M*H bytes; for a transformer FFN that is the dominant term.
+
+The backward pass implements Fig 2(c)'s multicast: one recomputed hidden/
+act-grad tile feeds BOTH the dX GEMM and the dW GEMMs (split into two
+kernels so each output's accumulation order is grid-consecutive).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "identity": lambda x: x,
+}
+
+_DACTS = {  # d/dx act(x)
+    "relu": lambda x: (x > 0).astype(x.dtype),
+    "identity": lambda x: jnp.ones_like(x),
+    "gelu": lambda x: jax.vmap(jax.grad(lambda t: jax.nn.gelu(t)))(x.reshape(-1)).reshape(x.shape),
+    "silu": lambda x: jax.nn.sigmoid(x) * (1 + x * (1 - jax.nn.sigmoid(x))),
+}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, w1_ref, w2_ref, o_ref, acc_ref, *, act: str, n_h: int):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the queue payload: (block_m, block_h) hidden tile, VMEM-resident
+    t = _ACTS[act](jnp.dot(x_ref[...], w1_ref[...],
+                           preferred_element_type=jnp.float32))
+    acc_ref[...] += jnp.dot(t.astype(x_ref.dtype), w2_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(h == n_h - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _fwd_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_h: int):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    t = jax.nn.silu(g) * u
+    acc_ref[...] += jnp.dot(t.astype(x.dtype), wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(h == n_h - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_mlp_fwd(x: jax.Array, w1: jax.Array, w2: jax.Array,
+                  *, act: str = "gelu", block_m: int = 128,
+                  block_h: int = 512, interpret: bool = False) -> jax.Array:
+    """act(x @ w1) @ w2 with the hidden dim streamed through VMEM."""
+    m, d_in = x.shape
+    _, hdim = w1.shape
+    d_out = w2.shape[1]
+    assert m % block_m == 0 and hdim % block_h == 0, (m, hdim, block_m, block_h)
+    n_m, n_h = m // block_m, hdim // block_h
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, act=act, n_h=n_h),
+        grid=(n_m, n_h),
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda i, h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d_out), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w2)
+
+
+def fused_mlp_swiglu_fwd(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                         wd: jax.Array, *, block_m: int = 128,
+                         block_h: int = 512, interpret: bool = False) -> jax.Array:
+    m, d_in = x.shape
+    _, hdim = wg.shape
+    d_out = wd.shape[1]
+    assert m % block_m == 0 and hdim % block_h == 0
+    n_m, n_h = m // block_m, hdim // block_h
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel_swiglu, n_h=n_h),
+        grid=(n_m, n_h),
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda i, h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d_out), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)
+
+
+# ---------------------------------------------------------------------------
+# backward (Fig 2c multicast): dX kernel + dW kernel
+# ---------------------------------------------------------------------------
+
+def _bwd_dx_kernel(x_ref, w1_ref, w2_ref, dy_ref, dx_ref, acc_ref,
+                   *, act: str, n_h: int):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # recompute the hidden tile (queue recompute beats HBM spill)
+    pre = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    dt = jnp.dot(dy_ref[...], w2_ref[...].T, preferred_element_type=jnp.float32)
+    da = dt * _DACTS[act](pre)
+    acc_ref[...] += jnp.dot(da.astype(x_ref.dtype), w1_ref[...].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(h == n_h - 1)
+    def _done():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _bwd_dw_kernel(x_ref, w1_ref, w2_ref, dy_ref, dw1_ref, dw2_ref,
+                   a1_ref, a2_ref, *, act: str, n_m: int):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        a1_ref[...] = jnp.zeros_like(a1_ref)
+        a2_ref[...] = jnp.zeros_like(a2_ref)
+
+    x = x_ref[...]
+    pre = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    t = _ACTS[act](pre)
+    dy = dy_ref[...]
+    # multicast: ONE staged tile pair (t, da) feeds both weight-grad GEMMs
+    a2_ref[...] += jnp.dot(t.astype(x.dtype).T, dy,
+                           preferred_element_type=jnp.float32)
+    dt = jnp.dot(dy, w2_ref[...].T, preferred_element_type=jnp.float32)
+    da = dt * _DACTS[act](pre)
+    a1_ref[...] += jnp.dot(x.T, da.astype(x.dtype),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(m == n_m - 1)
+    def _done():
+        dw1_ref[...] = a1_ref[...].astype(dw1_ref.dtype)
+        dw2_ref[...] = a2_ref[...].astype(dw2_ref.dtype)
+
+
+def fused_mlp_bwd(x, w1, w2, dy, *, act: str = "gelu", block_m: int = 128,
+                  block_h: int = 512, interpret: bool = False):
+    m, d_in = x.shape
+    _, hdim = w1.shape
+    d_out = w2.shape[1]
+    n_m, n_h = m // block_m, hdim // block_h
+    dx = pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, act=act, n_h=n_h),
+        grid=(n_m, n_h),
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda i, h: (h, 0)),
+            pl.BlockSpec((block_m, d_out), lambda i, h: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_in), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d_in), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w2, dy)
+    dw1, dw2 = pl.pallas_call(
+        functools.partial(_bwd_dw_kernel, act=act, n_m=n_m),
+        grid=(n_h, n_m),  # m innermost: dW accumulation is grid-consecutive
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda h, i: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda h, i: (h, 0)),
+            pl.BlockSpec((block_m, d_out), lambda h, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda h, i: (h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((hdim, d_out), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_in, block_h), jnp.float32),
+                        pltpu.VMEM((block_h, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w2, dy)
+    return dx, dw1.astype(w1.dtype), dw2.astype(w2.dtype)

@@ -1,0 +1,138 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`use_pallas` selects the dataflow kernels (TPU; `interpret=True` on CPU for
+tests); otherwise the ref.py XLA path runs -- models call these so the whole
+framework switches implementation with one config flag.
+
+`fused_mlp` carries a custom_vjp whose backward is itself a dataflow kernel
+pair (Fig 2(c) multicast -- see fused_mlp.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import combine_partials, flash_attention, flash_decode
+from .fused_mlp import fused_mlp_bwd, fused_mlp_fwd, fused_mlp_swiglu_fwd
+from .queue_reduce import queue_reduce
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    use_pallas: bool = False
+    interpret: bool = True      # CPU validation mode; False on real TPUs
+    block_m: int = 128
+    block_h: int = 512
+    block_q: int = 128
+    block_k: int = 128
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    padw = [(0, 0)] * x.ndim
+    padw[axis] = (0, pad)
+    return jnp.pad(x, padw), pad
+
+
+# ---------------------------------------------------------------------------
+# fused MLP with dataflow backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _fused_mlp(x, w1, w2, _dummy, act: str, cfg: KernelConfig):
+    return _fused_mlp_fwd_impl(x, w1, w2, act, cfg)
+
+
+def _fused_mlp_fwd_impl(x, w1, w2, act, cfg):
+    m, d_in = x.shape
+    bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
+    bh = cfg.block_h if w1.shape[1] % cfg.block_h == 0 else w1.shape[1]
+    xp, pad = _pad_to(x, 0, bm)
+    y = fused_mlp_fwd(xp, w1, w2, act=act, block_m=bm, block_h=bh,
+                      interpret=cfg.interpret)
+    return y[:m] if pad else y
+
+
+def _fwd(x, w1, w2, _dummy, act, cfg):
+    return _fused_mlp(x, w1, w2, _dummy, act, cfg), (x, w1, w2)
+
+
+def _bwd(act, cfg, res, dy):
+    x, w1, w2 = res
+    m = x.shape[0]
+    bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
+    bh = cfg.block_h if w1.shape[1] % cfg.block_h == 0 else w1.shape[1]
+    xp, pad = _pad_to(x, 0, bm)
+    dyp, _ = _pad_to(dy, 0, bm)
+    dx, dw1, dw2 = fused_mlp_bwd(xp, w1, w2, dyp, act=act, block_m=bm,
+                                 block_h=bh, interpret=cfg.interpret)
+    return (dx[:m] if pad else dx), dw1, dw2, None
+
+
+_fused_mlp.defvjp(_fwd, _bwd)
+
+
+def mlp(x: jax.Array, w1: jax.Array, w2: jax.Array, *, act: str = "gelu",
+        cfg: KernelConfig = KernelConfig()) -> jax.Array:
+    """act(x @ w1) @ w2; x may have leading batch dims."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.use_pallas:
+        y = _fused_mlp(x2, w1, w2, None, act, cfg)
+    else:
+        y = ref.mlp_ref(x2, w1, w2, act)
+    return y.reshape(*lead, w2.shape[1])
+
+
+def mlp_swiglu(x: jax.Array, wg, wu, wd, *, cfg: KernelConfig = KernelConfig()):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.use_pallas:
+        m = x2.shape[0]
+        bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
+        bh = cfg.block_h if wg.shape[1] % cfg.block_h == 0 else wg.shape[1]
+        x2p, pad = _pad_to(x2, 0, bm)
+        y = fused_mlp_swiglu_fwd(x2p, wg, wu, wd, block_m=bm, block_h=bh,
+                                 interpret=cfg.interpret)
+        y = y[:m] if pad else y
+    else:
+        y = ref.mlp_swiglu_ref(x2, wg, wu, wd)
+    return y.reshape(*lead, wd.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, window=None,
+              cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=cfg.block_q, block_k=cfg.block_k,
+                               interpret=cfg.interpret)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k, v, *, valid_len=None,
+                     cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return flash_decode(q, k, v, valid_len=valid_len,
+                            interpret=cfg.interpret)
+    return ref.decode_ref(q, k, v, valid_len=valid_len)
+
+
+# ---------------------------------------------------------------------------
+# reduction
+# ---------------------------------------------------------------------------
+
+def reduce(x, *, op: str = "sum", cfg: KernelConfig = KernelConfig()):
+    """Reduce axis 0 of (N, R, C)."""
+    if cfg.use_pallas:
+        return queue_reduce(x, op=op, interpret=cfg.interpret)
+    return ref.reduce_ref(x, op)

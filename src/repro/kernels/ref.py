@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests, and
+the XLA execution path used by models when `use_pallas=False`, e.g. for the
+dry-run lowering on the CPU backend)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "identity": lambda x: x,
+}
+
+
+def mlp_ref(x, w1, w2, act: str = "gelu"):
+    h = _ACTS[act](jnp.dot(x, w1, preferred_element_type=jnp.float32))
+    return jnp.dot(h.astype(x.dtype), w2,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mlp_swiglu_ref(x, wg, wu, wd):
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,Hq,Sq,D), k/v: (B,Hkv,Skv,D); GQA by head repetition."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (decode-friendly)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, k, v, *, valid_len=None, scale=None):
+    """q: (B,Hq,1,D); masks cache positions >= valid_len."""
+    b, hq, _, d = q.shape
+    _, hkv, s_len, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if valid_len is not None:
+        s = jnp.where(jnp.arange(s_len)[None, None, None, :] < valid_len,
+                      s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reduce_ref(x, op: str = "sum"):
+    f = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
+    return f(x.astype(jnp.float32), axis=0).astype(x.dtype)

@@ -1,0 +1,58 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation -- the dry-run lowers against
+these.  Modality frontends are STUBS per the assignment: pixtral gets
+precomputed patch embeddings, whisper gets precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, SHAPES
+from repro.models import lm as lm_mod
+from repro.models import encdec as encdec_mod
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _act_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_inputs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["tokens"] = SDS((b, s - cfg.vision_tokens), jnp.int32)
+        batch["patch_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                    _act_dtype(cfg))
+    if cfg.family == "encdec":
+        # encoder consumes frame embeddings of the same length (stub)
+        batch["frame_embeds"] = SDS((b, s, cfg.d_model), _act_dtype(cfg))
+    return batch
+
+
+def decode_inputs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """serve_step state: one new token against a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: encdec_mod.init_cache(cfg, b, s, enc_len=1500))
+    else:
+        cache = jax.eval_shape(lambda: lm_mod.init_cache(cfg, b, s))
+    return {"tokens": SDS((b,), jnp.int32),
+            "pos": SDS((), jnp.int32),
+            "cache": cache}
+
+
+def params_specs(cfg: ArchConfig, model) -> dict:
+    """Abstract parameter tree (no allocation)."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return train_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

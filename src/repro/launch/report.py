@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md SS Dry-run + SS Roofline tables from the dry-run
+artifacts (experiments/dryrun/*.json).  Run after the sweep:
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN = os.path.join("experiments", "dryrun")
+
+
+def load():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def next_lever(r) -> str:
+    """One sentence: what would move the dominant term down (SS Roofline)."""
+    d = r["roofline"]["dominant"]
+    kind = ("train" if "train" in r["shape"]
+            else "decode" if ("decode" in r["shape"] or "long" in r["shape"])
+            else "prefill")
+    if d == "memory" and kind == "decode":
+        return ("int8/f8 KV-cache quantization halves streamed bytes; "
+                "decode is legitimately cache-bandwidth-bound")
+    if d == "memory" and kind == "train":
+        return ("bytes inflated by XLA:CPU non-fusion; on TPU rely on "
+                "elementwise fusion + bf16 optimizer arithmetic; next: "
+                "fused Pallas MLP removes the d_ff intermediate round trip")
+    if d == "memory":
+        return ("fused dataflow attention/MLP kernels keep intermediates "
+                "in VMEM; raise KV chunk to amortize q re-reads")
+    if d == "collective":
+        return ("hierarchical/less-frequent FSDP gathers, int8 "
+                "error-feedback grad compression, latency-hiding overlap "
+                "under scan")
+    return ("near compute roofline: raise per-chip batch or switch the "
+            "MLP/attention blocks to the fused Pallas kernels for higher "
+            "MXU occupancy")
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def main(out=sys.stdout):
+    rows = load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fail = [r for r in rows if r.get("status") != "ok"]
+    single = [r for r in ok if r["mesh"] == "16x16"]
+    multi = [r for r in ok if r["mesh"] == "2x16x16"]
+
+    p = lambda *a: print(*a, file=out)
+    p("### Dry-run summary\n")
+    p(f"- cells compiled OK: **{len(ok)}** "
+      f"(single-pod {len(single)}, multi-pod {len(multi)}); failed: {len(fail)}")
+    if fail:
+        for r in fail:
+            p(f"  - FAIL {r['arch']} x {r['shape']} ({r['mesh']}): "
+              f"{r['status'][:150]}")
+    p("")
+    p("| arch | shape | mesh | HBM/chip (GiB) | fits 16GiB | colls/step "
+      "| coll GiB/chip | compile s |")
+    p("|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        m = r["memory"]
+        c = r["collectives"]
+        p(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {m['total_GiB_per_chip']:.2f} | {'Y' if m['fits_16GiB'] else 'N'} "
+          f"| {c['count']} | {c.get('total_calibrated', c['total']) / 2**30:.2f} "
+          f"| {r['compile_s']} |")
+    p("")
+    p("### Roofline table (single-pod 16x16, calibrated per-chip per step)\n")
+    p("| arch | shape | compute | memory | collective | dominant "
+      "| useful-FLOPs ratio | roofline frac | next lever |")
+    p("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        rf = r["roofline"]
+        p(f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} "
+          f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+          f"| **{rf['dominant']}** | {rf['useful_flops_ratio']:.2f} "
+          f"| {rf['roofline_fraction']:.3f} | {next_lever(r)} |")
+    p("")
+    doms = {}
+    for r in single:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    p(f"Dominant-term distribution (single-pod): {doms}")
+    worst = sorted(single, key=lambda r: r["roofline"]["roofline_fraction"])[:3]
+    p("Worst roofline fractions: "
+      + ", ".join(f"{r['arch']}x{r['shape']}={r['roofline']['roofline_fraction']:.3f}"
+                  for r in worst))
+    colb = sorted(single, key=lambda r: -r["roofline"]["collective_s"])[:3]
+    p("Most collective-bound: "
+      + ", ".join(f"{r['arch']}x{r['shape']}={fmt_s(r['roofline']['collective_s'])}"
+                  for r in colb))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --requests 16 --batch 4 --max-len 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_len=args.max_len, batch=args.batch),
+                        eos_id=-1)
+    for rid in range(args.requests):
+        eng.submit(rid, [2 + rid % 7, 11, 23])
+    t0 = time.time()
+    done = eng.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in done.values())
+    print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks / dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

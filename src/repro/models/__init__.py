@@ -1,0 +1,53 @@
+"""Model zoo entry point: family dispatch for init/forward/decode."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec, lm
+
+
+class Model(NamedTuple):
+    init: Callable
+    forward: Callable          # (params, batch, **kw) -> logits
+    init_cache: Callable
+    decode_step: Callable
+
+    @staticmethod
+    def for_config(cfg: ArchConfig) -> "Model":
+        return get_model(cfg)
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        def fwd(params, batch, **kw):
+            kw.pop("moe_groups", None)
+            return encdec.forward(params, batch["frame_embeds"],
+                                  batch["tokens"], cfg, **kw)
+
+        def icache(batch, max_len, **kw):
+            return encdec.init_cache(cfg, batch, max_len,
+                                     enc_len=kw.get("enc_len", 1500))
+
+        def dstep(params, token, pos, cache, **kw):
+            return encdec.decode_step(params, token, pos, cache, cfg, **kw)
+
+        return Model(lambda key: encdec.init_params(cfg, key), fwd, icache, dstep)
+
+    def fwd(params, batch, **kw):
+        return lm.forward(params, batch["tokens"], cfg,
+                          patch_embeds=batch.get("patch_embeds"), **kw)
+
+    def icache(batch, max_len, **kw):
+        return lm.init_cache(cfg, batch, max_len)
+
+    def dstep(params, token, pos, cache, **kw):
+        return lm.decode_step(params, token, pos, cache, cfg, **kw)
+
+    return Model(lambda key: lm.init_params(cfg, key), fwd, icache, dstep)
+
+
+__all__ = ["Model", "get_model", "lm", "encdec"]

@@ -1,0 +1,535 @@
+"""Shared model layers (functional, explicit param pytrees).
+
+Every block is written so the Kitsune executor can either run it through the
+dataflow Pallas kernels (cfg.kernels.use_pallas) or the XLA path (ref.py) --
+the dry-run lowers the XLA path.  Blocks also export operator-graph builders
+(graphs.py) consumed by the compiler benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import KernelConfig, attention as k_attention, \
+    decode_attention as k_decode, mlp as k_mlp, mlp_swiglu as k_mlp_swiglu
+from repro.kernels.flash_attention import combine_partials
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float | jax.Array = 1e4):
+    """x: (..., S, H, D); positions: (..., S) or (S,); theta may be traced."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.asarray(theta) ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed(table: jax.Array, ids: jax.Array, scale: bool = False) -> jax.Array:
+    e = jnp.take(table, ids, axis=0)
+    if scale:
+        e = e * math.sqrt(table.shape[-1])
+    return e
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA, optional window / qkv-bias / cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model, n_heads, n_kv, head_dim, *, bias=False,
+                   dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d_model, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads * head_dim, d_model), dtype) * s,
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta, constrain):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + p.get("bq", 0)
+    k = x @ p["wk"] + p.get("bk", 0)
+    v = x @ p["wv"] + p.get("bv", 0)
+    q = constrain(q.reshape(b, s, n_heads, head_dim), "act_heads")
+    k = constrain(k.reshape(b, s, n_kv, head_dim), "act_kv_heads")
+    v = constrain(v.reshape(b, s, n_kv, head_dim), "act_kv_heads")
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+                    head_dim: int, positions: jax.Array,
+                    theta: float | jax.Array = 1e4,
+                    window: int | jax.Array | None = None,
+                    causal: bool = True,
+                    kernels: KernelConfig = KernelConfig(),
+                    constrain=lambda t, _: t) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, d_model = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           constrain)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if isinstance(window, (int, type(None))) and not kernels.use_pallas:
+        o = _masked_attention(qh, kh, vh, causal=causal, window=window)
+    elif kernels.use_pallas and isinstance(window, (int, type(None))):
+        o = k_attention(qh, kh, vh, causal=causal, window=window, cfg=kernels)
+    else:
+        # traced window (scan-over-heterogeneous-layers): dynamic mask path
+        o = _masked_attention(qh, kh, vh, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return constrain(o @ p["wo"], "act_resid")
+
+
+def _masked_attention(q, k, v, *, causal=True, window=None):
+    """XLA attention with dynamic (possibly traced) sliding window."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        w = jnp.asarray(window)
+        mask &= (qi - ki) < w
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, *, n_heads: int,
+                     n_kv: int, head_dim: int, theta: float | jax.Array = 1e4,
+                     window: int | jax.Array | None = None,
+                     kernels: KernelConfig = KernelConfig(),
+                     constrain=lambda t, _: t, seq_shards: int = 1):
+    """Single-token decode with KV cache update.
+
+    cache_k/v: (B, n_kv, S_max, D).  pos: scalar current position.
+    Returns (out, new_k, new_v).  When the cache's sequence dim is sharded
+    (seq_shards > 1), callers wrap this in shard_map and psum-combine the
+    (o, m, l) partials -- distributed flash-decode (serve/engine.py).
+    """
+    b, one, d_model = x.shape
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           constrain)
+    # cast to the cache's storage dtype (supports float8 quantized KV)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), pos, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), pos, axis=2)
+    qh = q.transpose(0, 2, 1, 3)
+    valid = pos + 1
+    lo = jnp.maximum(0, valid - window) if window is not None else 0
+    if kernels.use_pallas and isinstance(window, type(None)):
+        o = k_decode(qh, ck, cv, valid_len=valid, cfg=kernels)
+    else:
+        # grouped GQA: never materialize K/V repeated to n_heads
+        s_max = ck.shape[2]
+        grp = n_heads // n_kv
+        qg = qh.reshape(b, n_kv, grp, head_dim)
+        ki = jnp.arange(s_max)
+        maskv = (ki < valid) & (ki >= lo)
+        sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (head_dim ** -0.5)
+        sc = jnp.where(maskv[None, None, None, :], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgs,bhsd->bhgd", pr,
+                       cv.astype(jnp.float32)).astype(x.dtype)
+        o = o.reshape(b, n_heads, 1, head_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * head_dim)
+    return constrain(o @ p["wo"], "act_resid"), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, *, act="swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    if act == "swiglu":
+        return {"wg": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s,
+                "wu": jax.random.normal(ks[1], (d_model, d_ff), dtype) * s,
+                "wd": jax.random.normal(ks[2], (d_ff, d_model), dtype) * (d_ff ** -0.5)}
+    return {"w1": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s,
+            "w2": jax.random.normal(ks[1], (d_ff, d_model), dtype) * (d_ff ** -0.5)}
+
+
+def mlp_block(p: Params, x: jax.Array, *, act="swiglu",
+              kernels: KernelConfig = KernelConfig(),
+              constrain=lambda t, _: t) -> jax.Array:
+    """The paper's Fig 2(a) flagship pattern -> kernels.fused_mlp."""
+    if act == "swiglu":
+        y = k_mlp_swiglu(x, p["wg"], p["wu"], p["wd"], cfg=kernels)
+    else:
+        y = k_mlp(x, p["w1"], p["w2"], act=act, cfg=kernels)
+    return constrain(y, "act_resid")
+
+
+# ---------------------------------------------------------------------------
+# MoE block (EP): top-k routing, capacity-based scatter dispatch
+# ---------------------------------------------------------------------------
+
+def init_moe(key, d_model, d_ff, n_experts, *, act="swiglu", dtype=jnp.bfloat16):
+    kr, ke = jax.random.split(key)
+    s = d_model ** -0.5
+    if act == "swiglu":
+        k1, k2, k3 = jax.random.split(ke, 3)
+        experts = {
+            "wg": jax.random.normal(k1, (n_experts, d_model, d_ff), dtype) * s,
+            "wu": jax.random.normal(k2, (n_experts, d_model, d_ff), dtype) * s,
+            "wd": jax.random.normal(k3, (n_experts, d_ff, d_model), dtype) * (d_ff ** -0.5),
+        }
+    else:
+        k1, k2 = jax.random.split(ke, 2)
+        experts = {
+            "w1": jax.random.normal(k1, (n_experts, d_model, d_ff), dtype) * s,
+            "w2": jax.random.normal(k2, (n_experts, d_ff, d_model), dtype) * (d_ff ** -0.5),
+        }
+    return {"router": jax.random.normal(kr, (d_model, n_experts), dtype) * s,
+            "experts": experts}
+
+
+def _dispatch_group(tokens, logits, *, n_experts, top_k, cap):
+    """Capacity-based dispatch for ONE token group.
+
+    tokens: (T, D); logits: (T, E).  Returns (dispatched (E, C, D),
+    combine info).  Position-in-expert from a cumsum over the group only --
+    groups bound the O(T*E) one-hot work (DESIGN.md SS4).
+
+    The (E, C, D) tensor is built by scattering int32 TOKEN INDICES into
+    (E, C) slots and then GATHERING token vectors: a D-wide scatter indexed
+    on the model-sharded expert dim made GSPMD replicate the whole
+    dispatched tensor (+13 GiB/chip on llama4 -- SS Perf iteration 3);
+    gathers with a shared leading batch dim shard cleanly."""
+    n_tok, d = tokens.shape
+    gate, eidx = jax.lax.top_k(logits, top_k)             # (T, k)
+    gate = jax.nn.softmax(gate, axis=-1)
+    flat_e = eidx.reshape(-1)
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n_tok), top_k)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    keep = pos_in_e < cap
+    # int32 slot map (E, C): which token fills each capacity slot
+    slot_tok = jnp.full((n_experts, cap), -1, jnp.int32)
+    slot_tok = slot_tok.at[
+        jnp.where(keep, flat_e, 0), jnp.where(keep, pos_in_e, 0)].set(
+        jnp.where(keep, flat_t, -1), mode="drop")
+    dispatched = jnp.where(slot_tok[..., None] >= 0,
+                           tokens[jnp.maximum(slot_tok, 0)], 0)
+    return dispatched, (flat_e, flat_g, flat_t, pos_in_e, keep)
+
+
+def _combine_group(out_e, info, n_tok, dtype):
+    flat_e, flat_g, flat_t, pos_in_e, keep = info
+    gathered = out_e[jnp.where(keep, flat_e, 0), jnp.where(keep, pos_in_e, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * flat_g[:, None].astype(out_e.dtype)
+    d = out_e.shape[-1]
+    return jnp.zeros((n_tok, d), dtype).at[flat_t].add(
+        gathered.astype(dtype))
+
+
+def moe_block(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
+              act="swiglu", capacity_factor: float = 1.25,
+              num_groups: int = 64,
+              kernels: KernelConfig = KernelConfig(),
+              constrain=lambda t, _: t) -> jax.Array:
+    """Expert-parallel MoE.  Routing is the paper's multicast pattern
+    (Fig 2c) at mesh scale: one token tile fans out to expert pipelines.
+
+    Tokens are split into groups (sharded with the batch); each group
+    scatter-dispatches to per-expert capacity slots C = T_g*k/E * cf
+    (overflow drops -- standard capacity routing).  Expert compute is a
+    batched einsum over the expert dim -> shards over the 'model' axis (EP)
+    when E divides it, else the expert FFN dims shard (TP-in-expert).
+    """
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    # group count: keep >= 4*top_k tokens per expert per group, divide n_tok
+    g = min(num_groups, max(1, n_tok // (4 * n_experts)))
+    while n_tok % g:
+        g -= 1
+    tg = n_tok // g
+    cap = max(int(tg * top_k / n_experts * capacity_factor), 1)
+    toks = tokens.reshape(g, tg, d)
+    logits = (toks @ p["router"]).astype(jnp.float32)
+
+    dispatched, info = jax.vmap(
+        lambda t, l: _dispatch_group(t, l, n_experts=n_experts, top_k=top_k,
+                                     cap=cap))(toks, logits)
+    dispatched = constrain(dispatched, "act_grouped_experts")  # (G, E, C, D)
+
+    # Expert compute FLATTENS the (G, C) dims into one: with the grouped
+    # form the weight-grad einsum contracts (g, c) and XLA materialized
+    # per-group dW partials -- G x |W| f32 (24 GiB/chip on grok train,
+    # EXPERIMENTS.md SS Perf iteration 5).  Merged, dW is one GEMM.
+    e = {k: constrain(v, "expert_weights") for k, v in p["experts"].items()}
+    flat = dispatched.transpose(1, 0, 2, 3).reshape(n_experts, g * cap, d)
+    if act == "swiglu":
+        gg = constrain(jnp.einsum("ecd,edf->ecf", flat, e["wg"]),
+                       "act_expert_hidden_flat")
+        uu = constrain(jnp.einsum("ecd,edf->ecf", flat, e["wu"]),
+                       "act_expert_hidden_flat")
+        h = (jax.nn.silu(gg.astype(jnp.float32)) * uu.astype(jnp.float32)).astype(x.dtype)
+        out_f = jnp.einsum("ecf,efd->ecd", h, e["wd"])
+    else:
+        h = constrain(jnp.einsum("ecd,edf->ecf", flat, e["w1"]),
+                      "act_expert_hidden_flat")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        out_f = jnp.einsum("ecf,efd->ecd", h, e["w2"])
+    out_e = out_f.reshape(n_experts, g, cap, d).transpose(1, 0, 2, 3)
+    out_e = constrain(out_e, "act_grouped_experts")
+
+    out = jax.vmap(lambda o, i: _combine_group(o, i, tg, x.dtype))(out_e, info)
+    return constrain(out.reshape(b, s, d), "act_resid")
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM block (hymba)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, d_model, d_inner, d_state, *, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "in_x": jax.random.normal(ks[0], (d_model, d_inner), dtype) * s,
+        "in_z": jax.random.normal(ks[1], (d_model, d_inner), dtype) * s,
+        "w_bcdt": jax.random.normal(ks[2], (d_inner, 2 * d_state + 1), dtype) * (d_inner ** -0.5),
+        "a_log": jnp.zeros((d_inner, d_state), jnp.float32) - 0.5,
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out": jax.random.normal(ks[5], (d_inner, d_model), dtype) * (d_inner ** -0.5),
+    }
+
+
+def mamba_block(p: Params, x: jax.Array, *, d_state: int,
+                constrain=lambda t, _: t, ssm_state: jax.Array | None = None):
+    """Selective SSM via associative scan:  h_t = a_t * h_{t-1} + b_t.
+
+    If `ssm_state` is given (decode), runs one recurrence step instead and
+    returns (y, new_state).  O(1) state is why the hybrid/ssm archs keep the
+    long_500k shape (DESIGN.md SS5)."""
+    bsz, s, _ = x.shape
+    xin = (x @ p["in_x"]).astype(jnp.float32)            # (B,S,I)
+    z = jax.nn.silu((x @ p["in_z"]).astype(jnp.float32))
+    bcdt = (xin.astype(x.dtype) @ p["w_bcdt"]).astype(jnp.float32)
+    B = bcdt[..., :d_state]
+    C = bcdt[..., d_state:2 * d_state]
+    dt = jax.nn.softplus(bcdt[..., -1:])                  # (B,S,1)
+    d_inner = xin.shape[-1]
+
+    def make_ab(xin_c, B_c, dt_c):
+        """decay/update tensors for one chunk: (B, chunk, I, state)."""
+        a = jnp.exp(-jnp.exp(p["a_log"]) * dt_c[..., None])
+        bu = (B_c[..., None, :] * xin_c[..., None]) * dt_c[..., None]
+        return a, bu
+
+    if ssm_state is not None:
+        a, bu = make_ab(xin, B, dt)
+        h = a[:, 0] * ssm_state + bu[:, 0]
+        y = jnp.einsum("bis,bs->bi", h, C[:, 0])[:, None]
+        y = y + xin * p["d_skip"]
+        y = (y * z).astype(x.dtype) @ p["out"]
+        return constrain(y, "act_resid"), h
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    # Monolithic associative scan over the sequence.  Two chunked-scan
+    # rewrites were tried and REFUTED by measurement (EXPERIMENTS.md SS Perf
+    # iteration 6): differentiating an inner lax.scan saves per-chunk
+    # intermediates and INCREASED the hymba train arena 36 -> 78/82 GiB
+    # while the bytes term improved 36 -> 32 s.  XLA's associative_scan
+    # backward handles the (B,S,I,state) tensors better than a manual
+    # chunk loop; the proper TPU fix is a Pallas scan kernel (future work).
+    a, bu = make_ab(xin, B, dt)
+    _, h = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    y = jnp.einsum("bsid,bsd->bsi", h, C)
+    y = y + xin * p["d_skip"]
+    y = (y * z).astype(x.dtype) @ p["out"]
+    return constrain(y, "act_resid"), h[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model, n_heads, *, proj_factor=2.0, dtype=jnp.bfloat16):
+    d_in = int(d_model * proj_factor)
+    head_dim = d_in // n_heads
+    ks = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    return {
+        "up": jax.random.normal(ks[0], (d_model, d_in), dtype) * s,
+        "wq": jax.random.normal(ks[1], (d_in, d_in), dtype) * (d_in ** -0.5),
+        "wk": jax.random.normal(ks[2], (d_in, d_in), dtype) * (d_in ** -0.5),
+        "wv": jax.random.normal(ks[3], (d_in, d_in), dtype) * (d_in ** -0.5),
+        "wif": jax.random.normal(ks[4], (d_in, 2 * n_heads), dtype) * (d_in ** -0.5),
+        "down": jax.random.normal(ks[5], (d_in, d_model), dtype) * (d_in ** -0.5),
+        "skip_g": jax.random.normal(ks[6], (d_model, d_in), dtype) * s,
+    }
+
+
+def mlstm_block(p: Params, x: jax.Array, *, n_heads: int,
+                constrain=lambda t, _: t):
+    """mLSTM: C_t = f_t C_{t-1} + i_t (v_t k_t^T); h_t = C_t q_t / max(|n q|,1).
+
+    Parallel form via cumulative log-gates (stabilized), computed as masked
+    attention -- the chunkwise-parallel formulation of the xLSTM paper.
+    """
+    b, s, d_model = x.shape
+    xi = x @ p["up"]
+    d_in = xi.shape[-1]
+    hd = d_in // n_heads
+    q = (xi @ p["wq"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (xi @ p["wk"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3) / math.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    gates = (xi @ p["wif"]).astype(jnp.float32).reshape(b, s, 2, n_heads)
+    i_g = gates[:, :, 0].transpose(0, 2, 1)              # (B,H,S) log-input gate
+    f_g = jax.nn.log_sigmoid(gates[:, :, 1]).transpose(0, 2, 1)
+    F = jnp.cumsum(f_g, axis=-1)                          # cumulative log forget
+    # D[t, u] = F_t - F_u + i_u  (u <= t): decay applied to source u at time t
+    D = F[..., :, None] - F[..., None, :] + i_g[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    D = jnp.where(mask, D, -jnp.inf)
+    m = jnp.max(D, axis=-1, keepdims=True)                # stabilizer
+    W = jnp.exp(D - m)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * W
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, -1, keepdims=True)),
+                       jnp.exp(-m))
+    h = jnp.einsum("bhqk,bhkd->bhqd", scores / norm, v.astype(jnp.float32))
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d_in).astype(x.dtype)
+    h = h * jax.nn.silu(x @ p["skip_g"])
+    return constrain(h @ p["down"], "act_resid")
+
+
+def mlstm_step(p: Params, x: jax.Array, n_heads: int, state):
+    """One mLSTM recurrence step (decode).  x: (B, 1, D).
+
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)) with
+      m_t = max(log f + m, i)
+      C_t = exp(log f + m_prev - m_t) C + exp(i - m_t) k v^T
+      h_t = (q @ C_t) / max(|q . n_t|, exp(-m_t))
+    -- the recurrent twin of mlstm_block's parallel form (tested equal).
+    """
+    C, n, m = state
+    b = x.shape[0]
+    xi = x[:, 0] @ p["up"]                                # (B, d_in)
+    d_in = xi.shape[-1]
+    hd = d_in // n_heads
+    q = (xi @ p["wq"]).reshape(b, n_heads, hd)
+    k = (xi @ p["wk"]).reshape(b, n_heads, hd) / math.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(b, n_heads, hd)
+    gates = (xi @ p["wif"]).astype(jnp.float32).reshape(b, 2, n_heads)
+    i_g = gates[:, 0]
+    f_g = jax.nn.log_sigmoid(gates[:, 1])
+    m_new = jnp.maximum(f_g + m, i_g)
+    f_p = jnp.exp(f_g + m - m_new)[..., None]
+    i_p = jnp.exp(i_g - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = f_p[..., None] * C + i_p[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n_new = f_p * n + i_p * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(b, d_in).astype(x.dtype)
+    h = h * jax.nn.silu(x[:, 0] @ p["skip_g"])
+    y = (h @ p["down"])[:, None]
+    return y, (C_new, n_new, m_new)
+
+
+def slstm_step_fn(g, state):
+    """Shared sLSTM cell: g (B, 4, D) gate pre-activations."""
+    c, n, m = state
+    i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return h, (c_new, n_new, m_new)
+
+
+def slstm_step(p: Params, x: jax.Array, state):
+    """One sLSTM step (decode).  x: (B, 1, D)."""
+    g = (x[:, 0] @ p["w_gates"]).astype(jnp.float32).reshape(
+        x.shape[0], 4, -1)
+    h, new = slstm_step_fn(g, state)
+    return (h.astype(x.dtype) @ p["out"])[:, None], new
+
+
+def init_slstm(key, d_model, n_heads, *, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 2)
+    s = d_model ** -0.5
+    return {
+        "w_gates": jax.random.normal(ks[0], (d_model, 4 * d_model), dtype) * s,
+        "out": jax.random.normal(ks[1], (d_model, d_model), dtype) * s,
+    }
+
+
+def slstm_block(p: Params, x: jax.Array, *, constrain=lambda t, _: t):
+    """sLSTM: scalar-memory LSTM with exponential input gating (sequential
+    scan -- the part of xLSTM that is *not* parallelizable over time)."""
+    b, s, d = x.shape
+    gates = (x @ p["w_gates"]).astype(jnp.float32).reshape(b, s, 4, d)
+
+    def step(carry, g):
+        h, new = slstm_step_fn(g, carry)
+        return new, h
+
+    init = (jnp.zeros((b, d)), jnp.zeros((b, d)), jnp.full((b, d), -1e30))
+    _, hs = jax.lax.scan(step, init, gates.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return constrain(h @ p["out"], "act_resid")

@@ -1,0 +1,471 @@
+"""Unified decoder-only LM covering the dense / moe / hybrid / ssm / vlm
+families, built from layers.py blocks.
+
+Design choices that matter at scale:
+  * layer params are STACKED with a leading group dim and the stack is
+    applied with lax.scan -- HLO stays O(1) in depth (compile time and
+    program size are what kill 60-layer models at 512 devices).
+  * heterogeneous layer schedules (gemma3 local/global windows, llama4
+    dense/MoE interleave, xlstm mLSTM/sLSTM alternation) are handled either
+    by per-layer scalar xs (windows, rope thetas) or by a scan *period* of
+    structurally-different sub-layers.
+  * attention never materializes (S, S): the XLA path uses a chunked
+    online-softmax scan (the same dataflow algorithm as the Pallas kernel,
+    executed by XLA), so the 32k/500k shapes fit.
+  * every activation passes through Sharder.constrain -- the logical-axis
+    rules in distributed/sharding.py decide physical placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import NULL
+from repro.kernels import KernelConfig
+from . import layers as L
+
+HUGE_WINDOW = 1 << 30
+
+# When True, layer/KV scans lower fully unrolled.  Set ONLY by the dry-run's
+# cost-calibration pass: XLA's cost_analysis counts a while-loop body once
+# (not x trip count), so per-group costs are measured on small unrolled
+# models and extrapolated (launch/dryrun.py, EXPERIMENTS.md SS Dry-run).
+UNROLL = False
+
+
+def _scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length, unroll=True if UNROLL else 1)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention on the XLA path
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
+    """q: (B,H,Sq,D); k/v: (B,Hkv,Skv,D).  Online-softmax over KV chunks --
+    the dataflow-attention algorithm, lowered through XLA instead of Pallas.
+    `window` may be a traced scalar (per-layer xs under scan).
+
+    GQA is computed GROUPED (q reshaped to (B, Hkv, grp, Sq, D)) instead of
+    repeating K/V to Hq heads: repeating materializes a (B,Hq,Skv,D) tensor
+    (60 GB for yi-34b prefill_32k) and forced GSPMD into involuntary
+    rematerialization -- EXPERIMENTS.md SS Perf iteration 2."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    grp = hq // hkv
+    qg = q.reshape(b, hkv, grp, sq, d)
+    if skv > 8192:
+        chunk = min(chunk, 512)   # bound the f32 score tile at long context
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        pad = (-skv) % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        skv_p = skv + pad
+    else:
+        skv_p = skv
+    n_chunks = skv_p // chunk
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    scale = d ** -0.5
+    qf = qg.astype(jnp.float32)
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    w = jnp.asarray(HUGE_WINDOW if window is None else window)
+
+    def step(carry, ck):
+        m, l, acc, j = carry
+        kj, vj = ck
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                       kj.astype(jnp.float32)) * scale
+        ki = j * chunk + jnp.arange(chunk)[None, :]
+        mask = (ki < skv)
+        if causal:
+            mask &= qi >= ki
+        mask &= (qi - ki) < w
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                       vj.astype(jnp.float32))
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((b, hkv, grp, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, grp, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, grp, sq, d), jnp.float32)
+    (m, l, acc, _), _ = _scan(step, (m0, l0, a0, 0), (kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def _attn(p, x, *, cfg: ArchConfig, positions, theta, window, kernels,
+          sharder):
+    b, s, _ = x.shape
+    q, k, v = L._project_qkv(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                             positions, theta, sharder.constrain)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if kernels.use_pallas and isinstance(window, (int, type(None))):
+        from repro.kernels import attention as k_attention
+        o = k_attention(qh, kh, vh, causal=True, window=window, cfg=kernels)
+    else:
+        o = chunked_attention(qh, kh, vh, causal=True, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return sharder.constrain(o @ p["wo"], "act_resid")
+
+
+# ---------------------------------------------------------------------------
+# per-family sub-layer structure
+# ---------------------------------------------------------------------------
+
+def _sub_kinds(cfg: ArchConfig) -> list[str]:
+    """Structural kinds of the sub-layers inside one scan group."""
+    if cfg.family == "moe":
+        if cfg.moe_period == 1:
+            return ["moe"]
+        return (["dense"] * (cfg.moe_period - 1)) + ["moe"]
+    if cfg.family == "hybrid":
+        return ["hybrid"]
+    if cfg.family == "ssm":
+        return [{"m": "mlstm", "s": "slstm"}[c] for c in cfg.block_pattern]
+    return ["dense"]  # dense / vlm
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    period = len(_sub_kinds(cfg))
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+def _init_sub(key, kind: str, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid"):
+        p["ln1"] = jnp.ones((d,), dtype)
+        p["attn"] = L.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype)
+        p["ln2"] = jnp.ones((d,), dtype)
+    if kind == "dense":
+        dff = cfg.dense_d_ff or cfg.d_ff
+        p["mlp"] = L.init_mlp(ks[1], d, dff, act=_mlp_act(cfg), dtype=dtype)
+    elif kind == "moe":
+        p["moe"] = L.init_moe(ks[1], d, cfg.d_ff, cfg.n_experts,
+                              act=_mlp_act(cfg), dtype=dtype)
+    elif kind == "hybrid":
+        p["ln_ssm"] = jnp.ones((d,), dtype)
+        p["ssm"] = L.init_mamba(ks[2], d, 2 * d, cfg.ssm_state, dtype=dtype)
+        p["mlp"] = L.init_mlp(ks[3], d, cfg.d_ff, act=_mlp_act(cfg), dtype=dtype)
+    elif kind == "mlstm":
+        p["ln1"] = jnp.ones((d,), dtype)
+        p["mlstm"] = L.init_mlstm(ks[0], d, cfg.n_heads, dtype=dtype)
+    elif kind == "slstm":
+        p["ln1"] = jnp.ones((d,), dtype)
+        p["slstm"] = L.init_slstm(ks[0], d, cfg.n_heads, dtype=dtype)
+    return p
+
+
+def _mlp_act(cfg: ArchConfig) -> str:
+    return cfg.act if cfg.act in ("swiglu", "gelu", "relu") else "gelu"
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    k_emb, k_blocks, k_un = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            k_un, (cfg.vocab, cfg.d_model), dtype) * 0.02
+    kinds = _sub_kinds(cfg)
+    groups = _n_groups(cfg)
+
+    def init_group(k):
+        sub_keys = jax.random.split(k, len(kinds))
+        return {f"sub{i}": _init_sub(sk, kind, cfg, dtype)
+                for i, (kind, sk) in enumerate(zip(kinds, sub_keys))}
+
+    params["blocks"] = jax.vmap(init_group)(jax.random.split(k_blocks, groups))
+    return params
+
+
+# per-layer window / rope-theta schedules (gemma3) -------------------------
+
+def layer_schedule(cfg: ArchConfig) -> dict[str, jax.Array]:
+    n = cfg.n_layers
+    if cfg.window_pattern:
+        pat = (cfg.window_pattern * ((n // len(cfg.window_pattern)) + 1))[:n]
+        win = jnp.array([cfg.window if c == "L" else HUGE_WINDOW for c in pat],
+                        jnp.int32)
+        theta = jnp.array([cfg.rope_theta_local if c == "L" else cfg.rope_theta
+                           for c in pat], jnp.float32)
+    else:
+        win = jnp.full((n,), cfg.window or HUGE_WINDOW, jnp.int32)
+        theta = jnp.full((n,), cfg.rope_theta or 1e4, jnp.float32)
+    groups = _n_groups(cfg)
+    period = n // groups
+    return {"window": win.reshape(groups, period),
+            "theta": theta.reshape(groups, period)}
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens: jax.Array, cfg: ArchConfig, *,
+            kernels: KernelConfig = KernelConfig(),
+            sharder=NULL, remat: bool = False,
+            patch_embeds: jax.Array | None = None,
+            moe_groups: int = 64, moe_cf: float = 1.25,
+            return_hidden: bool = False) -> jax.Array:
+    """tokens: (B, S_txt) int32 -> logits (B, S, vocab).
+
+    vlm family: patch_embeds (B, vision_tokens, D) are prepended (frontend
+    stub per assignment), total sequence = vision_tokens + S_txt.
+    """
+    x = L.embed(params["embed"], tokens, scale=True).astype(
+        params["embed"].dtype)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    b, s, d = x.shape
+    x = sharder.constrain(x, "act_resid")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kinds = _sub_kinds(cfg)
+    sched = layer_schedule(cfg)
+
+    def group_fn(x, group):
+        gp, win, theta = group
+        for i, kind in enumerate(kinds):
+            x = _apply_sub(gp[f"sub{i}"], kind, x, cfg=cfg,
+                           positions=positions, window=win[i],
+                           theta=theta[i], kernels=kernels, sharder=sharder,
+                           moe_groups=moe_groups, moe_cf=moe_cf)
+        return x, None
+
+    body = jax.checkpoint(group_fn) if remat else group_fn
+    x, _ = _scan(body, x, (params["blocks"], sched["window"],
+                           sched["theta"]))
+    x = L.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        # train path: the chunked cross-entropy computes logits per
+        # sequence chunk and never materializes (B, S, V) (train/step.py)
+        return sharder.constrain(x, "act_resid")
+    table = params.get("unembed", params["embed"])
+    logits = x @ table.T
+    return sharder.constrain(logits, "logits")
+
+
+def _apply_sub(p, kind, x, *, cfg, positions, window, theta, kernels,
+               sharder, moe_groups, moe_cf=1.25):
+    if kind in ("dense", "moe", "hybrid"):
+        h = L.rms_norm(x, p["ln1"])
+        a = _attn(p["attn"], h, cfg=cfg, positions=positions, theta=theta,
+                  window=window, kernels=kernels, sharder=sharder)
+        if kind == "hybrid":
+            # parallel attention + SSM heads on the same input (hymba)
+            hs = L.rms_norm(x, p["ln_ssm"])
+            ssm_out, _ = L.mamba_block(p["ssm"], hs, d_state=cfg.ssm_state,
+                                       constrain=sharder.constrain)
+            a = 0.5 * (a + ssm_out)
+        x = x + a
+        h2 = L.rms_norm(x, p["ln2"])
+        if kind == "moe":
+            f = L.moe_block(p["moe"], h2, n_experts=cfg.n_experts,
+                            top_k=cfg.top_k, act=_mlp_act(cfg),
+                            kernels=kernels, constrain=sharder.constrain,
+                            num_groups=moe_groups, capacity_factor=moe_cf)
+        else:
+            f = L.mlp_block(p["mlp"], h2, act=_mlp_act(cfg), kernels=kernels,
+                            constrain=sharder.constrain)
+        return x + f
+    if kind == "mlstm":
+        return x + L.mlstm_block(p["mlstm"], L.rms_norm(x, p["ln1"]),
+                                 n_heads=cfg.n_heads,
+                                 constrain=sharder.constrain)
+    if kind == "slstm":
+        return x + L.slstm_block(p["slstm"], L.rms_norm(x, p["ln1"]),
+                                 constrain=sharder.constrain)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    if dtype is None:
+        if cfg.kv_cache_dtype == "float8_e4m3fn":
+            dtype = jnp.float8_e4m3fn   # quantized KV (2x bytes saved)
+        elif cfg.dtype != "bfloat16":
+            dtype = jnp.dtype(cfg.dtype)
+        else:
+            dtype = jnp.bfloat16
+    groups = _n_groups(cfg)
+    kinds = _sub_kinds(cfg)
+    cache: dict[str, Any] = {}
+    n_attn = sum(1 for k in kinds if k in ("dense", "moe", "hybrid"))
+    if n_attn:
+        shape = (groups, n_attn, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    if any(k == "hybrid" for k in kinds):
+        cache["ssm"] = jnp.zeros((groups, batch, 2 * cfg.d_model,
+                                  cfg.ssm_state), jnp.float32)
+    if any(k == "mlstm" for k in kinds):
+        n_m = sum(1 for k in kinds if k == "mlstm")
+        d_in = 2 * cfg.d_model
+        hd = d_in // cfg.n_heads
+        cache["mC"] = jnp.zeros((groups, n_m, batch, cfg.n_heads, hd, hd),
+                                jnp.float32)
+        cache["mn"] = jnp.zeros((groups, n_m, batch, cfg.n_heads, hd), jnp.float32)
+        cache["mm"] = jnp.full((groups, n_m, batch, cfg.n_heads), -1e30, jnp.float32)
+    if any(k == "slstm" for k in kinds):
+        n_s = sum(1 for k in kinds if k == "slstm")
+        for nm in ("sc", "sn"):
+            cache[nm] = jnp.zeros((groups, n_s, batch, cfg.d_model), jnp.float32)
+        cache["sm"] = jnp.full((groups, n_s, batch, cfg.d_model), -1e30, jnp.float32)
+    return cache
+
+
+def decode_step(params: dict, token: jax.Array, pos: jax.Array, cache: dict,
+                cfg: ArchConfig, *, kernels: KernelConfig = KernelConfig(),
+                sharder=NULL, moe_cf: float = 1.25) -> tuple[jax.Array, dict]:
+    """token: (B,) int32; pos: scalar int32 (current position).
+    Returns (logits (B, vocab), new_cache)."""
+    x = L.embed(params["embed"], token[:, None], scale=True).astype(
+        params["embed"].dtype)
+    kinds = _sub_kinds(cfg)
+    sched = layer_schedule(cfg)
+
+    def group_fn(x, group):
+        gp = group["p"]
+        new = dict(group)
+        attn_i = 0
+        m_i = 0
+        s_i = 0
+        for i, kind in enumerate(kinds):
+            p = gp[f"sub{i}"]
+            win = group["window"][i]
+            theta = group["theta"][i]
+            if kind in ("dense", "moe", "hybrid"):
+                h = L.rms_norm(x, p["ln1"])
+                a, ck, cv = L.attention_decode(
+                    p["attn"], h, group["k"][attn_i], group["v"][attn_i], pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, theta=theta, window=win,
+                    kernels=kernels, constrain=sharder.constrain)
+                new["k"] = new["k"].at[attn_i].set(ck)
+                new["v"] = new["v"].at[attn_i].set(cv)
+                attn_i += 1
+                if kind == "hybrid":
+                    hs = L.rms_norm(x, p["ln_ssm"])
+                    ssm_out, s_new = L.mamba_block(
+                        p["ssm"], hs, d_state=cfg.ssm_state,
+                        constrain=sharder.constrain, ssm_state=group["ssm"])
+                    new["ssm"] = s_new
+                    a = 0.5 * (a + ssm_out)
+                x = x + a
+                h2 = L.rms_norm(x, p["ln2"])
+                if kind == "moe":
+                    f = L.moe_block(p["moe"], h2, n_experts=cfg.n_experts,
+                                    top_k=cfg.top_k, act=_mlp_act(cfg),
+                                    kernels=kernels,
+                                    constrain=sharder.constrain, num_groups=1,
+                                    capacity_factor=moe_cf)
+                else:
+                    f = L.mlp_block(p["mlp"], h2, act=_mlp_act(cfg),
+                                    kernels=kernels,
+                                    constrain=sharder.constrain)
+                x = x + f
+            elif kind == "mlstm":
+                y, (C, n, m) = L.mlstm_step(
+                    p["mlstm"], L.rms_norm(x, p["ln1"]), cfg.n_heads,
+                    (group["mC"][m_i], group["mn"][m_i], group["mm"][m_i]))
+                new["mC"] = new["mC"].at[m_i].set(C)
+                new["mn"] = new["mn"].at[m_i].set(n)
+                new["mm"] = new["mm"].at[m_i].set(m)
+                m_i += 1
+                x = x + y
+            elif kind == "slstm":
+                y, (c, n, m) = L.slstm_step(
+                    p["slstm"], L.rms_norm(x, p["ln1"]),
+                    (group["sc"][s_i], group["sn"][s_i], group["sm"][s_i]))
+                new["sc"] = new["sc"].at[s_i].set(c)
+                new["sn"] = new["sn"].at[s_i].set(n)
+                new["sm"] = new["sm"].at[s_i].set(m)
+                s_i += 1
+                x = x + y
+        new.pop("p")
+        new.pop("window")
+        new.pop("theta")
+        return x, new
+
+    xs = {"p": params["blocks"], "window": sched["window"],
+          "theta": sched["theta"], **cache}
+    x, new_cache = _scan(group_fn, x, xs)
+    x = L.rms_norm(x, params["final_norm"])
+    table = params.get("unembed", params["embed"])
+    logits = (x @ table.T)[:, 0]
+    return sharder.constrain(logits[:, None, :], "logits")[:, 0], new_cache
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, *,
+            max_len: int | None = None, kernels=KernelConfig(), sharder=NULL,
+            patch_embeds=None) -> tuple[jax.Array, dict]:
+    """Run the full-sequence forward and build a cache for decode.
+
+    For simplicity the cache is rebuilt by a per-token scan for the ssm
+    kinds; attention caches come from the projected K/V of the prefix.
+    """
+    logits = forward(params, tokens, cfg, kernels=kernels, sharder=sharder,
+                     patch_embeds=patch_embeds)
+    b, s = tokens.shape
+    max_len = max_len or (s + 128)
+    cache = init_cache(cfg, b, max_len)
+    pos = jnp.arange(s)[None].repeat(b, 0)
+    kinds = _sub_kinds(cfg)
+    sched = layer_schedule(cfg)
+
+    # re-project K/V per layer to fill the attention cache (one pass)
+    if "k" in cache:
+        x = L.embed(params["embed"], tokens, scale=True).astype(
+            params["embed"].dtype)
+        if cfg.family == "vlm" and patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+
+        def group_fn(x, group):
+            gp, win, theta = group
+            ks, vs = [], []
+            for i, kind in enumerate(kinds):
+                if kind in ("dense", "moe", "hybrid"):
+                    p = gp[f"sub{i}"]
+                    h = L.rms_norm(x, p["ln1"])
+                    q, k, v = L._project_qkv(
+                        p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, pos, theta[i], sharder.constrain)
+                    ks.append(k.transpose(0, 2, 1, 3))
+                    vs.append(v.transpose(0, 2, 1, 3))
+                x = _apply_sub(gp[f"sub{i}"], kind, x, cfg=cfg, positions=pos,
+                               window=win[i], theta=theta[i], kernels=kernels,
+                               sharder=sharder, moe_groups=8, moe_cf=1.25)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        _, (k_all, v_all) = _scan(
+            group_fn, x, (params["blocks"], sched["window"], sched["theta"]))
+        pad = max_len - s
+        cache["k"] = jnp.pad(k_all, ((0, 0), (0, 0), (0, 0), (0, 0),
+                                     (0, pad), (0, 0))).astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(v_all, ((0, 0), (0, 0), (0, 0), (0, 0),
+                                     (0, pad), (0, 0))).astype(cache["v"].dtype)
+    return logits, cache

@@ -1,0 +1,9 @@
+from .optimizers import (adamw, adafactor, Optimizer, OptState,
+                         clip_by_global_norm, cosine_schedule)
+from .compression import compress_int8, decompress_int8, error_feedback_allreduce
+from .quantized_state import quantize_blockwise, dequantize_blockwise
+
+__all__ = ["adamw", "adafactor", "Optimizer", "OptState",
+           "clip_by_global_norm", "cosine_schedule", "compress_int8",
+           "decompress_int8", "error_feedback_allreduce",
+           "quantize_blockwise", "dequantize_blockwise"]

@@ -1,0 +1,63 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 + per-tensor-block scales + ERROR FEEDBACK (the residual of each step's
+quantization is added back before the next step's compression), which keeps
+convergence while cutting inter-pod collective bytes ~4x -- aimed at the
+multi-pod mesh where the 'pod' axis crosses the slow inter-pod links
+(DESIGN.md SS7).  Used inside shard_map: compress -> psum(int-sum in fp32 of
+dequantized) -- we compress the *payload representation*; the collective
+itself moves int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantized_state import dequantize_blockwise, quantize_blockwise
+
+
+def compress_int8(g: jax.Array, block: int = 256):
+    return quantize_blockwise(g, block)
+
+
+def decompress_int8(codes, scales, shape):
+    return dequantize_blockwise(codes, scales, shape)
+
+
+def error_feedback_allreduce(grads, residuals, axis_name: str,
+                             block: int = 256):
+    """Compressed mean-all-reduce over `axis_name` with error feedback.
+
+    Each leaf: e = g + residual; (codes, scales) = Q8(e); residual' = e -
+    deQ(codes).  The COLLECTIVE moves the int8 codes (all_gather of int8 +
+    tiny fp32 scales ~ 4x fewer wire bytes than an fp32 psum); every shard
+    dequantizes the gathered codes and sums locally, so the reduction is
+    EXACT over the quantized values -- the only error is each shard's own
+    quantization, which error feedback re-injects next step.
+
+    Intended for the low-bandwidth mesh axis (inter-pod links, DESIGN.md
+    SS7); in-pod reduction should stay fp32 psum (hierarchical: psum('data')
+    then this over 'pod').
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, r):
+        e = g.astype(jnp.float32) + r
+        codes, scales, shape = quantize_blockwise(e, block)
+        local = dequantize_blockwise(codes, scales, shape)
+        new_r = e - local
+        all_codes = jax.lax.all_gather(codes, axis_name)     # int8 on wire
+        all_scales = jax.lax.all_gather(scales, axis_name)
+        vals = all_codes.astype(jnp.float32) * (all_scales[..., None] / 127.0)
+        total = jnp.sum(vals, axis=0).reshape(-1)[:e.size].reshape(shape)
+        return (total / n).astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

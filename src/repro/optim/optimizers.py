@@ -1,0 +1,152 @@
+"""Optimizers (no external deps): AdamW (fp32 or 8-bit block-quantized
+states) and Adafactor (factored 2nd moment) for the >=300B MoE archs where
+fp32 Adam states would blow the 16 GB/chip HBM budget (DESIGN.md SS4).
+
+Functional API:  opt = adamw(lr); state = opt.init(params);
+                 new_p, new_s = opt.update(grads, state, params)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantized_state import dequantize_blockwise, quantize_blockwise
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    # scale in the grad's own dtype: an f32 round-trip would materialize a
+    # full f32 copy of every leaf (2x grad memory at 400B params)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_bits: int = 32, block: int = 256) -> Optimizer:
+    """state_bits=8 stores m/v as int8 + per-block fp32 scales (bnb-style):
+    4x less optimizer HBM, the difference between llama4-400b fitting a
+    single v5e pod or not."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def zero(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            if state_bits == 8:
+                return (quantize_blockwise(z, block), quantize_blockwise(z, block))
+            return (z, z)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zero, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, mv, p):
+            m, v = mv
+            if state_bits == 8:
+                m = dequantize_blockwise(*m)
+                v = dequantize_blockwise(*v)
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / (1 - b1 ** step)
+            vh = v / (1 - b2 ** step)
+            upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            if state_bits == 8:
+                m = quantize_blockwise(m, block)
+                v = quantize_blockwise(v, block)
+            return new_p, (m, v)
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_inner = tdef.unflatten([o[1] for o in out])
+        return new_params, OptState(step, new_inner)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) -- factored 2nd moment, O(n+m) state
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float | Callable = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def zero(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),       # row
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))  # col
+            return jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32), jax.tree.map(zero, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -decay
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                r, c = s
+                r = beta * r + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * c + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (r[..., None] * c[..., None, :]
+                         / (jnp.mean(r, axis=-1, keepdims=True)[..., None] + eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = (r, c)
+            else:
+                v = beta * s + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = v
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                OptState(step, tdef.unflatten([o[1] for o in out])))
+
+    return Optimizer(init, update)

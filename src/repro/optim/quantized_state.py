@@ -1,0 +1,55 @@
+"""Block-wise int8 quantization for optimizer state (bnb-style).
+
+Each contiguous block of `block` values stores int8 codes + one fp32
+absmax scale: 4.0x -> ~1.03x bytes/value.  Used by adamw(state_bits=8) so
+the 300-400B MoE archs' optimizer state fits the per-chip HBM budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """int8 codes + per-block scales; `shape` is static (pytree aux data) so
+    quantized optimizer state is jit/scan/shard-compatible."""
+
+    def __init__(self, codes, scales, shape):
+        self.codes = codes
+        self.scales = scales
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __iter__(self):  # back-compat: (codes, scales, shape) unpacking
+        return iter((self.codes, self.scales, self.shape))
+
+
+def quantize_blockwise(x: jax.Array, block: int = 256):
+    """-> (codes int8 (N_pad,), scales fp32 (N_pad/block,), orig shape)."""
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / scale * 127.0), -127, 127).astype(jnp.int8)
+    return QTensor(codes, scale[:, 0], shape)
+
+
+def dequantize_blockwise(codes, scales=None, shape=None) -> jax.Array:
+    if isinstance(codes, QTensor):
+        codes, scales, shape = codes.codes, codes.scales, codes.shape
+    vals = codes.astype(jnp.float32) * (scales[:, None] / 127.0)
+    flat = vals.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)

@@ -1,0 +1,3 @@
+from .engine import ServeConfig, ServingEngine, serve_step
+
+__all__ = ["ServeConfig", "ServingEngine", "serve_step"]

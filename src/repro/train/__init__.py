@@ -1,0 +1,3 @@
+from .step import TrainConfig, loss_fn, make_train_step, make_train_state
+
+__all__ = ["TrainConfig", "loss_fn", "make_train_step", "make_train_state"]

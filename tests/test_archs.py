@@ -1,0 +1,204 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward + one
+train-style grad step + decode, asserting shapes and finiteness; plus
+consistency invariants (decode == forward logits; mLSTM parallel == step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, applicable_shapes
+from repro.models import encdec, get_model, lm
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(r, B=2, S=32):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, r.vocab)}
+    if r.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, :S - r.vision_tokens]
+        batch["patch_embeds"] = jax.random.normal(KEY, (B, r.vision_tokens, r.d_model))
+    if r.family == "encdec":
+        batch["frame_embeds"] = jax.random.normal(KEY, (B, S, r.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+class TestArchSmoke:
+    def test_forward_shapes_finite(self, name):
+        r = get_config(name).reduced()
+        model = get_model(r)
+        params = model.init(KEY)
+        batch = make_batch(r)
+        logits = model.forward(params, batch)
+        assert logits.shape == (2, 32, r.vocab)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_train_step_grads_finite(self, name):
+        r = get_config(name).reduced()
+        model = get_model(r)
+        params = model.init(KEY)
+        batch = make_batch(r)
+
+        def loss_fn(p):
+            logits = model.forward(p, batch, remat=True).astype(jnp.float32)
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+            lse = jax.nn.logsumexp(logits[:, :labels.shape[1]], axis=-1)
+            ll = jnp.take_along_axis(logits[:, :labels.shape[1]],
+                                     labels[..., None], axis=-1)[..., 0]
+            return jnp.mean(lse - ll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert bool(jnp.isfinite(loss))
+        flat = jax.tree_util.tree_leaves(grads)
+        assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+        # gradient is non-trivial
+        assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in flat)
+
+    def test_decode_steps(self, name):
+        r = get_config(name).reduced()
+        model = get_model(r)
+        params = model.init(KEY)
+        cache = model.init_cache(2, 64, enc_len=32)
+        if r.family == "encdec":
+            enc = encdec.encode(params, jax.random.normal(KEY, (2, 32, r.d_model)), r)
+            cache = encdec.build_cross_cache(params, enc, r, cache)
+        tok = jax.random.randint(KEY, (2,), 0, r.vocab)
+        for t in range(3):
+            logits, cache = model.decode_step(params, tok, jnp.int32(t), cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            assert logits.shape == (2, r.vocab)
+            assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+class TestConsistency:
+    @pytest.mark.parametrize("name", ["gemma3-1b", "qwen1.5-32b",
+                                      "grok-1-314b", "hymba-1.5b",
+                                      "xlstm-350m"])
+    def test_decode_matches_forward(self, name):
+        """Greedy decode logits at position t == full-forward logits at t."""
+        r = get_config(name).reduced()
+        model = get_model(r)
+        params = model.init(KEY)
+        B, S = 1, 8
+        toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, r.vocab)
+        full = model.forward(params, {"tokens": toks}, moe_cf=8.0).astype(jnp.float32)
+        cache = model.init_cache(B, 32)
+        outs = []
+        for t in range(S):
+            logits, cache = model.decode_step(params, toks[:, t], jnp.int32(t), cache,
+                                              moe_cf=8.0)
+            outs.append(logits.astype(jnp.float32))
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_mlstm_parallel_equals_recurrent(self):
+        """The chunkwise-parallel mLSTM form == step recurrence."""
+        d, h, B, S = 32, 4, 2, 12
+        p = L.init_mlstm(jax.random.PRNGKey(1), d, h, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, S, d)) * 0.5
+        par = L.mlstm_block(p, x, n_heads=h)
+        d_in = 2 * d
+        hd = d_in // h
+        state = (jnp.zeros((B, h, hd, hd)), jnp.zeros((B, h, hd)),
+                 jnp.full((B, h), -1e30))
+        outs = []
+        for t in range(S):
+            y, state = L.mlstm_step(p, x[:, t:t + 1], h, state)
+            outs.append(y[:, 0])
+        rec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(par),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_chunked_attention_matches_dense(self):
+        """lm.chunked_attention (the XLA dataflow path) == exact attention."""
+        from repro.kernels import ref
+        q = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 64, 16))
+        v = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 64, 16))
+        got = lm.chunked_attention(q, k, v, causal=True, chunk=16)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunked_attention_window(self):
+        from repro.kernels import ref
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 64, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 64, 16))
+        got = lm.chunked_attention(q, k, k, causal=True, window=16, chunk=32)
+        want = ref.attention_ref(q, k, k, causal=True, window=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_moe_group_invariance(self):
+        """MoE output is identical for different group counts (same routing)."""
+        p = L.init_moe(jax.random.PRNGKey(1), 32, 64, 4, act="swiglu",
+                       dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 32))
+        # generous capacity so no drops -> groupings must agree
+        y1 = L.moe_block(p, x, n_experts=4, top_k=2, capacity_factor=8.0,
+                         num_groups=1)
+        y2 = L.moe_block(p, x, n_experts=4, top_k=2, capacity_factor=8.0,
+                         num_groups=4)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestQuantizedKV:
+    def test_f8_cache_halves_bytes_and_tracks_bf16(self):
+        """float8 KV cache: 2x fewer bytes; decode logits stay close to the
+        bf16-cache decode (the qwen decode_32k capacity lever)."""
+        import dataclasses
+        r = dataclasses.replace(get_config("qwen1.5-32b").reduced(),
+                                dtype="float32")
+        r8 = dataclasses.replace(r, kv_cache_dtype="float8_e4m3fn")
+        model = get_model(r)
+        params = model.init(KEY)
+        c16 = lm.init_cache(r, 2, 32)
+        c8 = lm.init_cache(r8, 2, 32)
+        assert c8["k"].dtype == jnp.float8_e4m3fn
+        # 1 byte/elem vs the full-precision cache's itemsize
+        assert c16["k"].nbytes == c8["k"].nbytes * c16["k"].dtype.itemsize
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0, r.vocab)
+        outs = {}
+        for tag, cache in (("bf16", c16), ("f8", c8)):
+            c = cache
+            o = []
+            for t in range(6):
+                logits, c = lm.decode_step(params, toks[:, t], jnp.int32(t),
+                                           c, r)
+                o.append(logits)
+            outs[tag] = jnp.stack(o, 1).astype(jnp.float32)
+        # f8 storage noise is bounded; rankings shouldn't collapse
+        err = float(jnp.max(jnp.abs(outs["bf16"] - outs["f8"])))
+        scale = float(jnp.max(jnp.abs(outs["bf16"])))
+        assert err < 0.15 * scale + 0.5, (err, scale)
+
+
+class TestConfigs:
+    def test_all_archs_registered(self):
+        assert len(ARCHS) == 10
+
+    def test_param_counts_in_band(self):
+        """Sanity: derived param counts near the names' billions."""
+        expect = {"gemma3-1b": (0.7, 2.0), "qwen1.5-32b": (28, 38),
+                  "phi3-medium-14b": (12, 16), "yi-34b": (30, 38),
+                  "pixtral-12b": (10, 14), "grok-1-314b": (280, 340),
+                  "llama4-maverick-400b-a17b": (360, 440),
+                  "hymba-1.5b": (1.0, 2.2), "whisper-small": (0.15, 0.3),
+                  "xlstm-350m": (0.25, 0.5)}
+        for name, (lo, hi) in expect.items():
+            n = get_config(name).param_count() / 1e9
+            assert lo <= n <= hi, (name, n)
+
+    def test_active_params_llama4(self):
+        n = get_config("llama4-maverick-400b-a17b").active_param_count() / 1e9
+        assert 12 <= n <= 22, n   # "a17b"
+
+    def test_shape_applicability(self):
+        cells = sum(len(applicable_shapes(c)) for c in ARCHS.values())
+        # 10 archs x (train, prefill, decode) + 3 long_500k = 33 runnable
+        assert cells == 33
+        assert "long_500k" in applicable_shapes(get_config("hymba-1.5b"))
+        assert "long_500k" not in applicable_shapes(get_config("yi-34b"))
