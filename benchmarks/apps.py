@@ -26,19 +26,23 @@ def mlp_chain(g: Graph, x: str, dims: list[int], prefix: str,
     return cur
 
 
-def dlrm(batch: int = BATCH) -> Graph:
+def dlrm(batch: int = BATCH, emb_rows: int = 1_000_000) -> Graph:
     """DLRM: sparse embedding gathers (excluded ops) + bottom MLP +
     pairwise feature interaction + top MLP."""
     g = Graph("dlrm")
     g.input("dense_x", (batch, 13), "bfloat16")
     g.input("sparse_ids", (batch, 8), "int32")
     bot = mlp_chain(g, "dense_x", [512, 256, 64], "bot", last_act=True)
-    emb = g.gather("emb", (1000000, 64), "sparse_ids").name     # excluded
-    cat = g.concat("cat_feats", [bot, emb], axis=-1)
-    # feature interaction: pairwise dots == batched GEMM
-    g.add_node = None  # (no-op marker)
-    inter = g.matmul("interact", cat.name, cat.name).name
-    cat2 = g.concat("cat2", [bot, inter], axis=-1).name
+    emb = g.gather("emb", (emb_rows, 64), "sparse_ids").name    # excluded
+    # stack dense + sparse features: (B, 1+8, 64)
+    botf = g.add(Node("bot_feat", "reshape", [bot],
+                      TensorSpec((batch, 1, 64), "bfloat16"))).name
+    cat = g.concat("cat_feats", [botf, emb], axis=1).name
+    # feature interaction: per-sample pairwise dots == batched GEMM
+    inter = g.matmul("interact", cat, cat, transpose_b=True).name
+    flat = g.add(Node("inter_flat", "reshape", [inter],
+                      TensorSpec((batch, 9 * 9), "bfloat16"))).name
+    cat2 = g.concat("cat2", [bot, flat], axis=-1).name
     top = mlp_chain(g, cat2, [512, 256, 1], "top")
     g.output("out", top)
     return g
@@ -107,14 +111,18 @@ def graphcast(nodes: int = 40962, hidden: int = 512, steps: int = 4) -> Graph:
 
 
 def llama3_8b(seq: int = 2048, batch: int = 4, n_layers: int = 2,
-              decode: bool = False) -> Graph:
+              decode: bool = False, *, d: int = 4096, ff: int = 14336,
+              hq: int = 32, hkv: int = 8, hd: int = 128,
+              vocab: int = 128256) -> Graph:
     """Two representative llama3-8B layers + LM head.  decode=True models
-    the token-generation phase (seq=1 against a KV cache)."""
+    the token-generation phase (seq=1 against a KV cache).  The dimension
+    keywords default to the real 8B config; tests shrink them (with hkv=hq,
+    since the GQA head-expansion is modeled, not materialized) to execute
+    the graph numerically."""
     g = Graph("llama_tok" if decode else "llama_ctx")
-    d, ff, hq, hkv, hd = 4096, 14336, 32, 8, 128
     sq = 1 if decode else seq
     g.input("ids", (batch, sq), "int32")
-    cur = g.gather("emb", (128256, d), "ids").name            # excluded
+    cur = g.gather("emb", (vocab, d), "ids").name             # excluded
 
     def reshape(name, src, shape):
         return g.add(Node(name, "reshape", [src],
@@ -131,7 +139,8 @@ def llama3_8b(seq: int = 2048, batch: int = 4, n_layers: int = 2,
         at = g.attention(f"attn_{i}", qr, kr, vr).name
         ar = reshape(f"a2_{i}", at, (batch * sq, hq * hd))
         o = g.linear(f"wo_{i}", ar, d).name
-        r1 = g.elementwise(f"res1_{i}", [cur, o], "add", flop_per_elem=1).name
+        o3 = reshape(f"o3_{i}", o, (batch, sq, d))
+        r1 = g.elementwise(f"res1_{i}", [cur, o3], "add", flop_per_elem=1).name
         n2 = g.norm(f"ln2_{i}", r1).name
         gate = g.linear(f"wg_{i}", n2, ff).name
         up = g.linear(f"wu_{i}", n2, ff).name
@@ -139,7 +148,7 @@ def llama3_8b(seq: int = 2048, batch: int = 4, n_layers: int = 2,
         dn = g.linear(f"wd_{i}", act, d).name
         cur = g.elementwise(f"res2_{i}", [r1, dn], "add", flop_per_elem=1).name
     fin = g.norm("final_ln", cur).name
-    head = g.linear("lm_head", fin, 128256).name
+    head = g.linear("lm_head", fin, vocab).name
     g.output("out", head)
     return g
 

@@ -9,20 +9,20 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (V5E, design_pipeline, evaluate, select_subgraphs,
-                        v5e_mesh)
+import repro
+from repro import CompilerOptions
+from repro.core import v5e_mesh
 from .apps import APPS, synthesize_backward
 
 HW = v5e_mesh(8)
 
 
 def analyze(graph):
-    sel = select_subgraphs(graph)
-    pg = design_pipeline(sel)
-    grouped, total = sel.coverage()
-    bsp = evaluate(pg, HW, "bsp")
-    vert = evaluate(pg, HW, "vertical")
-    kit = evaluate(pg, HW, "kitsune")
+    app = repro.compile(graph, CompilerOptions(mode="kitsune", hw=HW))
+    grouped, total = app.selection.coverage()
+    bsp = app.estimate(HW, "bsp")
+    vert = app.estimate(HW, "vertical")
+    kit = app.estimate(HW, "kitsune")
     return {
         "ops": total,
         "grouped": grouped,

@@ -6,17 +6,19 @@ from __future__ import annotations
 import math
 import time
 
-from repro.core import design_pipeline, evaluate, select_subgraphs, v5e_mesh
+import repro
+from repro import CompilerOptions
+from repro.core import v5e_mesh
 from .apps import APPS, synthesize_backward
 
 HW = v5e_mesh(8)
 
 
 def e2e(graph):
-    pg = design_pipeline(select_subgraphs(graph))
-    t_b = evaluate(pg, HW, "bsp").time
-    t_v = evaluate(pg, HW, "vertical").time
-    t_k = evaluate(pg, HW, "kitsune").time
+    app = repro.compile(graph, CompilerOptions(mode="kitsune", hw=HW))
+    t_b = app.estimate(HW, "bsp").time
+    t_v = app.estimate(HW, "vertical").time
+    t_k = app.estimate(HW, "kitsune").time
     return t_b / t_v, t_b / t_k
 
 

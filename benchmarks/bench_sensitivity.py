@@ -7,7 +7,9 @@ from __future__ import annotations
 import math
 import time
 
-from repro.core import design_pipeline, evaluate, select_subgraphs, v5e_mesh
+import repro
+from repro import CompilerOptions
+from repro.core import v5e_mesh
 from .apps import APPS, synthesize_backward
 
 HW = v5e_mesh(8)
@@ -15,11 +17,11 @@ HW2 = HW.scaled(compute=2.0, onchip=2.0)   # DRAM fixed
 
 
 def gains(graph):
-    pg = design_pipeline(select_subgraphs(graph))
+    app = repro.compile(graph, CompilerOptions(mode="kitsune", hw=HW))
     out = {}
     for mode in ("bsp", "kitsune"):
-        t1 = evaluate(pg, HW, mode).time
-        t2 = evaluate(pg, HW2, mode).time
+        t1 = app.estimate(HW, mode).time
+        t2 = app.estimate(HW2, mode).time
         out[mode] = t1 / t2 - 1.0
     return out
 

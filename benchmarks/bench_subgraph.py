@@ -6,16 +6,17 @@ from __future__ import annotations
 import math
 import time
 
-from repro.core import (cost_bsp, cost_kitsune, cost_vertical,
-                        design_pipeline, select_subgraphs, v5e_mesh)
+import repro
+from repro import CompilerOptions
+from repro.core import cost_bsp, cost_kitsune, cost_vertical, v5e_mesh
 from .apps import APPS, synthesize_backward
 
 HW = v5e_mesh(8)
 
 
 def subgraph_speedups(graph, hw=HW):
-    sel = select_subgraphs(graph)
-    pg = design_pipeline(sel)
+    app = repro.compile(graph, CompilerOptions(mode="kitsune", hw=hw))
+    pg = app.pipelined
     rows = []
     for p in pg.pipelines:
         members = [o.name for s in p.stages for o in s.ops]

@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (design_pipeline, select_subgraphs,
-                        utilization_quadrants, v5e_mesh)
+import repro
+from repro import CompilerOptions
+from repro.core import utilization_quadrants, v5e_mesh
 from .apps import APPS, synthesize_backward
 
 HW = v5e_mesh(8)
@@ -18,7 +19,7 @@ def main(csv=True):
         if name != "llama_tok":
             graphs["train"] = synthesize_backward(make())
         for phase, g in graphs.items():
-            pg = design_pipeline(select_subgraphs(g))
+            pg = repro.compile(g, CompilerOptions(mode="kitsune", hw=HW)).pipelined
             t0 = time.perf_counter_ns()
             q_b = utilization_quadrants(pg, HW, "bsp")
             q_k = utilization_quadrants(pg, HW, "kitsune")

@@ -2,22 +2,24 @@
 
     python -m examples.quickstart        (PYTHONPATH=src)
 
-Walks the paper's SS5 flow: build an operator graph -> subgraph selection
-(pattern matching) -> pipeline design (Algorithm 1: queues + reduction
-splits) -> ILP load balance (Algorithm 2) -> execute BSP vs Kitsune, with
-measured XLA traffic and the analytic speedup estimate.
+One entrypoint -- `repro.compile()` -- runs the paper's SS5 flow as a staged
+pass pipeline (select -> split_reduction -> create_queues -> epilogue_fuse
+-> balance) and returns a CompiledApp.  Running the artifact executes real
+XLA programs whose compiled executables are cached by (graph fingerprint,
+feed shapes, options): the second run() performs zero new lowerings.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import (Graph, balance, compare_traffic, cost_bsp,
-                        cost_kitsune, cost_vertical, design_pipeline,
-                        init_params, select_subgraphs, v5e_mesh)
+import repro
+from repro import CompilerOptions
+from repro.core import v5e_mesh
 
 
 def main():
     # 1. an operator graph: Linear -> GeLU -> Linear with a fat hidden dim
-    g = Graph("mlp")
+    g = repro.Graph("mlp")
     g.input("x", (2048, 512), "float32")
     g.linear("fc1", "x", 4096)
     g.elementwise("gelu", ["fc1"], "gelu", flop_per_elem=8)
@@ -25,41 +27,40 @@ def main():
     g.output("y", "fc2")
     print(f"graph: {g}")
 
-    # 2. subgraph selection (paper SS5.1)
-    sel = select_subgraphs(g)
-    for sf in sel.sf_nodes:
-        print(f"  sf-node {sf.name}: {sf.members} (patterns: {sf.matched_patterns})")
-
-    # 3. pipeline design (Algorithm 1)
-    pg = design_pipeline(sel)
-    pipe = pg.pipelines[0]
-    for s in pipe.stages:
-        print(f"  stage {s.name}: ops={[o.name for o in s.ops]} "
-              f"resource={s.resource} flops={s.flops:.3g}")
-    for q in pipe.queues:
-        print(f"  queue {q.name}: {q.producer} -> {q.consumers} "
-              f"payload={q.payload_bytes // 1024}KB depth={q.depth}")
-
-    # 4. load balance (Algorithm 2) on an 8-chip spatial fabric
+    # 2. compile: subgraph selection + Algorithm 1 + Algorithm 2, as passes
     hw = v5e_mesh(8)
-    res = balance(pipe, hw, dram_bytes=0, onchip_bytes=0)
-    print(f"  allocation: {res.allocation} (binding: {res.binding})")
+    app = repro.compile(g, CompilerOptions(mode="kitsune", hw=hw))
+    print(app.describe())
 
-    # 5. analytic speedups
-    members = [o.name for s in pipe.stages for o in s.ops]
-    t_b = cost_bsp(g, members, hw).time
-    t_v = cost_vertical(g, members, hw).time
-    t_k = cost_kitsune(g, pipe, hw).time
+    # 3. analytic speedups from the same artifact (paper Figs 10-14)
+    t_b = app.estimate(hw, "bsp").time
+    t_v = app.estimate(hw, "vertical").time
+    t_k = app.estimate(hw, "kitsune").time
     print(f"  model: bsp={t_b * 1e6:.1f}us vertical={t_v * 1e6:.1f}us "
           f"kitsune={t_k * 1e6:.1f}us  (speedup {t_b / t_k:.2f}x)")
 
-    # 6. execute for real (XLA): numerics must match; traffic must drop
-    params = init_params(g, jax.random.PRNGKey(0))
+    # 4. execute for real (XLA): all three modes from the one entrypoint,
+    # numerics must match; fused traffic must drop
+    params = app.init_params(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2048, 512), jnp.float32)
-    r = compare_traffic(g, {"x": x}, params)
-    print(f"  measured: traffic reduction {r['traffic_reduction']:.1%} "
-          f"({r['bsp_programs']} kernels -> {r['kitsune_programs']} fused)")
-    assert r["traffic_reduction"] > 0.3
+    reports = {mode: repro.compile(g, CompilerOptions(mode=mode, hw=hw))
+               .run({"x": x}, params) for mode in ("bsp", "vertical", "kitsune")}
+    for mode in ("vertical", "kitsune"):
+        np.testing.assert_allclose(np.asarray(reports["bsp"].outputs["y"]),
+                                   np.asarray(reports[mode].outputs["y"]),
+                                   rtol=2e-2, atol=2e-2)
+    b, k = reports["bsp"], reports["kitsune"]
+    red = 1.0 - k.bytes_accessed / b.bytes_accessed
+    print(f"  measured: traffic reduction {red:.1%} "
+          f"({b.n_programs} kernels -> {k.n_programs} fused)")
+    assert red > 0.3
+
+    # 5. the compiled-artifact cache: same shapes => zero new lowerings
+    before = repro.lowering_count()
+    app.run({"x": x}, params)
+    assert repro.lowering_count() == before, "hot path re-lowered!"
+    print(f"  cache: second run() hit {k.n_programs} cached executables, "
+          f"0 new lowerings")
     print("quickstart OK")
 
 

@@ -1,0 +1,17 @@
+"""Kitsune-on-TPU reproduction: dataflow execution for operator graphs.
+
+Front door:
+
+    import repro
+    app = repro.compile(graph, repro.CompilerOptions(mode="kitsune"))
+    report = app.run(feeds, params)
+"""
+from .api import (CachedFunction, CompiledApp, CompilerOptions, Graph, Node,
+                  PassManager, TensorSpec, cached_jit, compile,
+                  graph_fingerprint, init_params, lowering_count)
+
+__all__ = [
+    "compile", "CompilerOptions", "CompiledApp", "PassManager",
+    "cached_jit", "CachedFunction", "init_params", "lowering_count",
+    "Graph", "Node", "TensorSpec", "graph_fingerprint",
+]

@@ -1,0 +1,29 @@
+"""Public API of the Kitsune reproduction: one compiler front-door.
+
+    import repro
+    from repro import CompilerOptions
+
+    app = repro.compile(graph, CompilerOptions(mode="kitsune"))
+    report = app.run(feeds, params)
+
+`compile()` runs the staged pass pipeline (select -> split_reduction ->
+create_queues -> epilogue_fuse -> balance) and returns a CompiledApp whose
+XLA executables are cached process-wide -- repeated runs with same-shaped
+feeds perform zero new lowerings.  The same cache backs `cached_jit`, the
+entrypoint the serving/launch stacks use for non-graph jax callables.
+"""
+from .core.compiler import (CachedFunction, CompiledApp, CompilerOptions,
+                            CompileState, PassManager, PassRecord, cached_jit,
+                            compile)
+from .core.executor import (ExecutionReport, GraphExecutor,
+                            clear_executable_cache, executable_cache,
+                            init_params, lowering_count)
+from .core.graph import Graph, Node, TensorSpec, graph_fingerprint
+
+__all__ = [
+    "compile", "CompilerOptions", "CompiledApp", "CompileState",
+    "PassManager", "PassRecord", "cached_jit", "CachedFunction",
+    "ExecutionReport", "GraphExecutor", "init_params",
+    "executable_cache", "clear_executable_cache", "lowering_count",
+    "Graph", "Node", "TensorSpec", "graph_fingerprint",
+]

@@ -1,11 +1,24 @@
-"""Kitsune-on-TPU core: operator-graph IR, compiler passes, queues, cost model.
+"""Kitsune-on-TPU core: operator-graph IR, staged compiler, queues, executor.
 
-Pipeline (paper SS5):  Graph -> select_subgraphs -> design_pipeline -> balance
-                       -> executor / kernels.
+The paper's SS5 flow is exposed as ONE front door (compiler.py):
+
+    app = repro.compile(graph, CompilerOptions(mode=...))   # staged passes
+    app.run(feeds, params)                                  # cached XLA exe
+
+with the stages runnable as named passes through PassManager:
+
+    select -> split_reduction -> create_queues -> epilogue_fuse -> balance
+
+The historical free functions (select_subgraphs, design_pipeline, balance,
+GraphExecutor) remain exported for direct pass-level use and tests; the
+executor now runs behind per-mode backends (bsp | vertical | kitsune) with a
+process-wide compiled-executable cache.
 """
-from .graph import Graph, Node, TensorSpec, MXU, VPU
+from .graph import Graph, Node, TensorSpec, MXU, VPU, graph_fingerprint
 from .patterns import select_subgraphs, Selection, SfNode, PATTERN_LIBRARY
-from .pipeline import design_pipeline, PipelinedGraph, Pipeline, Stage, QueueSpec
+from .pipeline import (design_pipeline, split_reductions, plan_queues,
+                       fuse_epilogues, materialize_queues, OpQueue,
+                       PipelinedGraph, Pipeline, Stage, QueueSpec)
 from .balance import solve_allocation, balance, BalanceResult
 from .costmodel import (
     A100, V5E, HwSpec, v5e_mesh, evaluate, cost_bsp, cost_vertical,
@@ -16,17 +29,31 @@ from .queue import (
     queue_bandwidth, VMEM_QUEUE, ICI_QUEUE, L2_QUEUE_A100,
     spatial_pipeline, make_spatial_pipeline, ring_push,
 )
-from .executor import GraphExecutor, init_params, compare_traffic
+from .executor import (GraphExecutor, ExecutorBackend, BSPBackend,
+                       VerticalBackend, KitsuneBackend, make_backend,
+                       ExecutionReport, init_params, compare_traffic,
+                       executable_cache, clear_executable_cache,
+                       lowering_count)
+from .compiler import (CompilerOptions, CompiledApp, CompileState,
+                       PassManager, PassRecord, cached_jit, CachedFunction,
+                       compile)
 
 __all__ = [
-    "Graph", "Node", "TensorSpec", "MXU", "VPU",
+    "Graph", "Node", "TensorSpec", "MXU", "VPU", "graph_fingerprint",
     "select_subgraphs", "Selection", "SfNode", "PATTERN_LIBRARY",
-    "design_pipeline", "PipelinedGraph", "Pipeline", "Stage", "QueueSpec",
+    "design_pipeline", "split_reductions", "plan_queues", "fuse_epilogues",
+    "materialize_queues", "OpQueue",
+    "PipelinedGraph", "Pipeline", "Stage", "QueueSpec",
     "solve_allocation", "balance", "BalanceResult",
     "A100", "V5E", "HwSpec", "v5e_mesh", "evaluate", "cost_bsp",
     "cost_vertical", "cost_kitsune", "roofline", "RooflineTerms",
     "utilization_quadrants",
     "queue_bandwidth", "VMEM_QUEUE", "ICI_QUEUE", "L2_QUEUE_A100",
     "spatial_pipeline", "make_spatial_pipeline", "ring_push",
-    "GraphExecutor", "init_params", "compare_traffic",
+    "GraphExecutor", "ExecutorBackend", "BSPBackend", "VerticalBackend",
+    "KitsuneBackend", "make_backend", "ExecutionReport", "init_params",
+    "compare_traffic", "executable_cache", "clear_executable_cache",
+    "lowering_count",
+    "CompilerOptions", "CompiledApp", "CompileState", "PassManager",
+    "PassRecord", "cached_jit", "CachedFunction", "compile",
 ]

@@ -1,0 +1,445 @@
+"""The Kitsune compiler front-door: `repro.compile(graph, options)`.
+
+This module turns the loose pipeline of free functions (select_subgraphs ->
+design_pipeline -> balance -> GraphExecutor) into one staged, introspectable
+compiler (the paper's SS5 end-to-end flow behind a single entrypoint):
+
+    options = CompilerOptions(mode="kitsune")
+    app = repro.compile(graph, options)      # runs the pass pipeline once
+    report = app.run(feeds, params)          # cached executables; no re-jit
+
+Pieces:
+
+  * CompilerOptions -- every compiler knob in one frozen dataclass (mode,
+    tile bytes, split-reduction threshold, pattern subset, balancing).
+  * PassManager -- runs the stages as NAMED passes
+    (`select -> split_reduction -> create_queues -> epilogue_fuse ->
+    balance`) with per-pass wall-clock timing, an IR dump hook, support for
+    reordering, and per-pass disabling (each disabled pass degrades to its
+    identity/fallback form instead of crashing downstream passes).
+  * CompiledApp -- the compiled artifact: selection + pipelined IR + balance
+    results + an executor Engine whose XLA executables live in the
+    process-wide cache keyed by (graph fingerprint, feed shapes, options),
+    so repeated `run()` calls (and fresh `compile()`s of an identical graph)
+    perform zero new lowerings.
+  * cached_jit -- the same executable cache for arbitrary jax callables
+    (used by serve/ and launch/ so the production launchers go through the
+    compiler's caching layer instead of re-jitting per instance).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import jax
+
+from .balance import BalanceResult, balance as _balance_pipeline
+from .costmodel import GraphCost, HwSpec, evaluate, v5e_mesh
+from .executor import (Engine, ExecutionReport, _shape_key, executable_cache,
+                       init_params, make_backend)
+from .graph import Graph, graph_fingerprint
+from .patterns import PATTERN_LIBRARY, Selection, select_subgraphs
+from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, OpQueue,
+                       Pipeline, PipelinedGraph, Stage, fuse_epilogues,
+                       materialize_queues, plan_queues, split_reductions)
+
+MODES = ("bsp", "vertical", "kitsune")
+PASS_NAMES = ("select", "split_reduction", "create_queues", "epilogue_fuse",
+              "balance")
+
+
+@dataclass(frozen=True)
+class CompilerOptions:
+    """Every knob of the compiler in one (hashable) place.
+
+    mode                 executor mode the artifact runs in:
+                         bsp      -- one kernel per op (eager baseline)
+                         vertical -- whole graph as ONE program (vertical-
+                                     fusion baseline)
+                         kitsune  -- sf-nodes as fused dataflow programs
+    tile_bytes           on-chip queue payload size (Algorithm 1)
+    split_reduction_min  reductions at least this wide get fan-in/final split
+    patterns             subset of PATTERN_LIBRARY names to match (None=all)
+    min_sf_size          smallest op count an sf-node may have
+    balance              run the ILP load-balancing pass (Algorithm 2)
+    hw                   HwSpec the balance pass and estimate() default to
+    disable              pass names to skip (each falls back to its identity
+                         form; e.g. disabling `epilogue_fuse` yields one
+                         stage per op)
+    dump_ir              hook called as dump_ir(pass_name, state) after every
+                         pass -- the introspection point for IR dumps
+    """
+    mode: str = "kitsune"
+    tile_bytes: int = DEFAULT_TILE_BYTES
+    split_reduction_min: int = SPLIT_REDUCTION_MIN
+    patterns: tuple[str, ...] | None = None
+    min_sf_size: int = 2
+    balance: bool = True
+    hw: HwSpec | None = None
+    disable: tuple[str, ...] = ()
+    dump_ir: Callable[[str, "CompileState"], None] | None = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        for p in self.disable:
+            if p not in PASS_NAMES:
+                raise ValueError(f"unknown pass {p!r} in disable "
+                                 f"(known: {PASS_NAMES})")
+        if self.patterns is not None:
+            object.__setattr__(self, "patterns", tuple(self.patterns))
+            for name in self.patterns:
+                if name not in PATTERN_LIBRARY:
+                    raise ValueError(f"unknown pattern {name!r} "
+                                     f"(known: {tuple(PATTERN_LIBRARY)})")
+
+    @property
+    def disabled(self) -> frozenset[str]:
+        dis = set(self.disable)
+        if not self.balance:
+            dis.add("balance")
+        return frozenset(dis)
+
+    def resolved_hw(self) -> HwSpec:
+        return self.hw if self.hw is not None else v5e_mesh(8)
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for the executable cache (hooks excluded: they
+        observe compilation but cannot change the produced programs)."""
+        return (self.mode, self.tile_bytes, self.split_reduction_min,
+                self.patterns, self.min_sf_size, tuple(sorted(self.disabled)))
+
+
+@dataclass
+class CompileState:
+    """Mutable state threaded through the pass pipeline."""
+    graph: Graph
+    selection: Selection | None = None
+    work_graph: Graph | None = None                 # post split-reduction
+    members_of: dict[str, list[str]] | None = None  # sf name -> members
+    op_queues: dict[str, list[OpQueue]] = field(default_factory=dict)
+    stages_of: dict[str, tuple[list[Stage], dict[str, Stage]]] = \
+        field(default_factory=dict)
+    pipelined: PipelinedGraph | None = None
+    balance_results: dict[str, BalanceResult] = field(default_factory=dict)
+
+
+@dataclass
+class PassRecord:
+    name: str
+    seconds: float
+    disabled: bool = False
+    summary: str = ""
+
+
+# -- pass bodies (and the identity fallbacks used when a pass is disabled) --
+
+def _ensure_selection(state: CompileState, opts: CompilerOptions) -> Selection:
+    if state.selection is None:
+        state.selection = Selection(state.graph, [])
+    return state.selection
+
+
+def _ensure_work(state: CompileState, opts: CompilerOptions) -> Graph:
+    if state.work_graph is None:
+        sel = _ensure_selection(state, opts)
+        state.work_graph = state.graph.clone()
+        state.members_of = {sf.name: list(sf.members) for sf in sel.sf_nodes}
+    return state.work_graph
+
+
+def _invalidate_derived(state: CompileState) -> None:
+    """Drop everything computed from a previous selection/work graph (pass
+    reordering support: a structural pass re-running invalidates downstream
+    state so lazy _ensure_* rebuilds it consistently)."""
+    state.work_graph = None
+    state.members_of = None
+    state.op_queues = {}
+    state.stages_of = {}
+    state.pipelined = None
+
+
+def _pass_select(state: CompileState, opts: CompilerOptions) -> str:
+    state.selection = select_subgraphs(state.graph, min_size=opts.min_sf_size,
+                                       patterns=opts.patterns)
+    _invalidate_derived(state)
+    grouped, total = state.selection.coverage()
+    return f"{len(state.selection.sf_nodes)} sf-nodes, coverage {grouped}/{total}"
+
+
+def _skip_select(state: CompileState, opts: CompilerOptions) -> str:
+    state.selection = Selection(state.graph, [])
+    _invalidate_derived(state)
+    return "selection disabled: 0 sf-nodes"
+
+
+def _pass_split_reduction(state: CompileState, opts: CompilerOptions) -> str:
+    sel = _ensure_selection(state, opts)
+    work, members = split_reductions(sel, opts.split_reduction_min)
+    # the rewrite renames member ops: stage/queue state built against the
+    # old graph (reordered pipelines) is stale and must be rebuilt
+    _invalidate_derived(state)
+    state.work_graph, state.members_of = work, members
+    n = sum(1 for node in state.work_graph.topo()
+            if node.kind == "reduce_partial")
+    return f"{n} reductions split"
+
+
+def _skip_split_reduction(state: CompileState, opts: CompilerOptions) -> str:
+    _ensure_work(state, opts)
+    return "reductions left whole"
+
+
+def _pass_create_queues(state: CompileState, opts: CompilerOptions) -> str:
+    g = _ensure_work(state, opts)
+    state.op_queues = {name: plan_queues(g, members)
+                       for name, members in state.members_of.items()}
+    n = sum(len(v) for v in state.op_queues.values())
+    return f"{n} queue intents"
+
+
+def _skip_create_queues(state: CompileState, opts: CompilerOptions) -> str:
+    _ensure_work(state, opts)
+    state.op_queues = {name: [] for name in state.members_of}
+    return "no queues"
+
+
+def _pass_epilogue_fuse(state: CompileState, opts: CompilerOptions,
+                        enable: bool = True) -> str:
+    g = _ensure_work(state, opts)
+    state.stages_of = {
+        name: fuse_epilogues(g, name, members, enable=enable)
+        for name, members in state.members_of.items()}
+    n_ops = sum(len(m) for m in state.members_of.values())
+    n_stages = sum(len(s) for s, _ in state.stages_of.values())
+    return f"{n_ops} ops -> {n_stages} stages"
+
+
+def _skip_epilogue_fuse(state: CompileState, opts: CompilerOptions) -> str:
+    return _pass_epilogue_fuse(state, opts, enable=False) + " (unfused)"
+
+
+def _pass_balance(state: CompileState, opts: CompilerOptions) -> str:
+    pg = _ensure_pipelined(state, opts)
+    hw = opts.resolved_hw()
+    state.balance_results = {}
+    for pipe in pg.pipelines:
+        # DRAM / on-chip volumes for the bandwidth caps come from the model
+        dram = sum(s.weight_bytes for s in pipe.stages)
+        onchip = sum(q.total_bytes * (1 + len(q.consumers))
+                     for q in pipe.queues)
+        state.balance_results[pipe.name] = _balance_pipeline(
+            pipe, hw, dram, onchip)
+    return f"{len(state.balance_results)} pipelines balanced on {hw.name}"
+
+
+def _skip_balance(state: CompileState, opts: CompilerOptions) -> str:
+    _ensure_pipelined(state, opts)
+    state.balance_results = {}
+    return "unbalanced (1 unit per stage at execution)"
+
+
+def _ensure_pipelined(state: CompileState, opts: CompilerOptions,
+                      ) -> PipelinedGraph:
+    """Materialize the PipelinedGraph from whatever the passes produced.
+
+    Called lazily by the first consumer (balance pass or compile() itself),
+    so `create_queues` and `epilogue_fuse` may run in either order."""
+    if state.pipelined is not None:
+        return state.pipelined
+    g = _ensure_work(state, opts)
+    sel = _ensure_selection(state, opts)
+    pipelines: list[Pipeline] = []
+    for sf in sel.sf_nodes:
+        members = state.members_of[sf.name]
+        if sf.name in state.stages_of:
+            stages, op_to_stage = state.stages_of[sf.name]
+        else:
+            stages, op_to_stage = fuse_epilogues(g, sf.name, members)
+        queues, edges = materialize_queues(
+            sf.name, stages, state.op_queues.get(sf.name, []), op_to_stage,
+            opts.tile_bytes)
+        pipelines.append(Pipeline(sf.name, stages, queues, sf, edges))
+    state.pipelined = PipelinedGraph(g, pipelines)
+    return state.pipelined
+
+
+_PASSES: dict[str, tuple[Callable, Callable]] = {
+    "select": (_pass_select, _skip_select),
+    "split_reduction": (_pass_split_reduction, _skip_split_reduction),
+    "create_queues": (_pass_create_queues, _skip_create_queues),
+    "epilogue_fuse": (_pass_epilogue_fuse, _skip_epilogue_fuse),
+    "balance": (_pass_balance, _skip_balance),
+}
+
+
+class PassManager:
+    """Runs the compiler stages as named, introspectable passes.
+
+    `passes` selects and ORDERS the passes (default: the canonical
+    Algorithm-1 order).  Disabled passes (options.disable / balance=False)
+    still appear in the records, marked disabled, and run their identity
+    fallback so later passes see consistent state."""
+
+    def __init__(self, passes: tuple[str, ...] | list[str] | None = None):
+        names = tuple(passes) if passes is not None else PASS_NAMES
+        for n in names:
+            if n not in _PASSES:
+                raise ValueError(f"unknown pass {n!r} (known: {PASS_NAMES})")
+        self.pass_names = names
+
+    def run(self, state: CompileState, options: CompilerOptions,
+            ) -> list[PassRecord]:
+        records: list[PassRecord] = []
+        disabled = options.disabled
+        for name in self.pass_names:
+            run_fn, skip_fn = _PASSES[name]
+            fn = skip_fn if name in disabled else run_fn
+            t0 = time.perf_counter()
+            summary = fn(state, options)
+            dt = time.perf_counter() - t0
+            records.append(PassRecord(name, dt, name in disabled, summary))
+            if options.dump_ir is not None:
+                options.dump_ir(name, state)
+        return records
+
+
+class CompiledApp:
+    """The artifact `repro.compile()` returns: pipelined IR + balance plan +
+    a mode-specific executor whose XLA executables are cached process-wide.
+
+    run() with same-shaped feeds never re-lowers: the first call per shape
+    populates the cache; later calls (and later CompiledApps of an identical
+    graph+options) reuse the same compiled objects."""
+
+    def __init__(self, graph: Graph, options: CompilerOptions,
+                 state: CompileState, pass_records: list[PassRecord]):
+        self.graph = graph
+        self.options = options
+        self.state = state
+        self.pass_records = pass_records
+        self.selection = state.selection
+        self.pipelined = state.pipelined
+        self.balance_results = state.balance_results
+        self.fingerprint = graph_fingerprint(graph)
+        if options.mode == "kitsune":
+            # execute the POST-pass graph: reductions split, stage structure
+            # fixed; sf programs follow the pipelined member lists.  Stage
+            # flattening can reorder ops (epilogue fusion hoists an op into
+            # its producer's stage past siblings), so re-sort to topo order.
+            exec_graph = state.pipelined.graph
+            order = {name: i for i, name in enumerate(exec_graph.nodes)}
+            sf_members = [
+                (p.name, sorted((o.name for s in p.stages for o in s.ops),
+                                key=order.__getitem__))
+                for p in state.pipelined.pipelines]
+        else:
+            exec_graph = graph
+            sf_members = []
+        backend = make_backend(options.mode, exec_graph, sf_members)
+        self._engine = Engine(backend,
+                              (self.fingerprint, options.cache_key()))
+
+    # -- execution --------------------------------------------------------
+    def run(self, feeds: dict[str, jax.Array], params: dict | None = None,
+            ) -> ExecutionReport:
+        return self._engine.run(feeds, params or {})
+
+    def init_params(self, key: jax.Array, scale: float = 0.02,
+                    dtype=None) -> dict[str, Any]:
+        kw = {} if dtype is None else {"dtype": dtype}
+        return init_params(self.graph, key, scale, **kw)
+
+    def executables(self) -> list[tuple]:
+        """Cache keys of this app's compiled programs (debug/introspection)."""
+        prefix = self._engine.engine_key
+        return [k for k in executable_cache().keys()
+                if k[:len(prefix)] == prefix]
+
+    # -- analytics --------------------------------------------------------
+    def estimate(self, hw: HwSpec | None = None, mode: str | None = None,
+                 ) -> GraphCost:
+        """Analytic end-to-end cost (paper Figs 10-14) of this artifact's
+        pipelined IR under `mode` (default: the compiled mode)."""
+        return evaluate(self.pipelined, hw or self.options.resolved_hw(),
+                        mode or self.options.mode)
+
+    def describe(self) -> str:
+        """Human-readable pass pipeline + artifact summary."""
+        lines = [f"CompiledApp({self.graph.name}, mode={self.options.mode}, "
+                 f"fingerprint={self.fingerprint})"]
+        for r in self.pass_records:
+            flag = " [disabled]" if r.disabled else ""
+            lines.append(f"  pass {r.name:<16} {r.seconds * 1e3:8.2f} ms"
+                         f"{flag}  {r.summary}")
+        for p in self.pipelined.pipelines:
+            lines.append(f"  pipeline {p.name}: "
+                         f"{len(p.stages)} stages, {len(p.queues)} queues")
+            for s in p.stages:
+                alloc = self.balance_results.get(p.name)
+                units = (alloc.allocation.get(s.name) if alloc else None)
+                ustr = f" units={units}" if units is not None else ""
+                lines.append(f"    stage {s.name} [{s.resource}]"
+                             f" ops={[o.name for o in s.ops]}{ustr}")
+            for q in p.queues:
+                lines.append(f"    queue {q.name}: {q.producer} -> "
+                             f"{q.consumers} ({q.payload_bytes // 1024}KB"
+                             f" x{q.depth})")
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"CompiledApp({self.graph.name!r}, mode={self.options.mode!r}, "
+                f"{len(self.pipelined.pipelines)} pipelines)")
+
+
+def compile(graph: Graph, options: CompilerOptions | None = None, *,
+            pass_manager: PassManager | None = None,
+            **option_overrides) -> CompiledApp:
+    """Compile an operator graph into a CompiledApp.
+
+    `repro.compile(g)` / `repro.compile(g, CompilerOptions(mode="bsp"))` /
+    `repro.compile(g, mode="vertical")` all work; keyword overrides build a
+    CompilerOptions when none is given."""
+    if options is None:
+        options = CompilerOptions(**option_overrides)
+    elif option_overrides:
+        options = replace(options, **option_overrides)
+    pm = pass_manager or PassManager()
+    state = CompileState(graph)
+    records = pm.run(state, options)
+    _ensure_pipelined(state, options)
+    return CompiledApp(graph, options, state, records)
+
+
+# ---------------------------------------------------------------------------
+# cached_jit: the executable cache for arbitrary jax callables
+# ---------------------------------------------------------------------------
+
+class CachedFunction:
+    """A jax callable bound to the compiled-artifact cache.
+
+    Replaces bare `jax.jit(fn)` in the serving/launch paths: the first call
+    per argument-shape lowers+compiles (counted by `lowering_count()`);
+    every later call -- including from a different instance constructed with
+    the same `key` -- reuses the cached executable."""
+
+    def __init__(self, fn: Callable, key: tuple, **jit_kwargs):
+        self._fn = fn
+        self._key = ("cached_jit",) + tuple(key)
+        self._jit_kwargs = jit_kwargs
+
+    def __call__(self, *args):
+        cache = executable_cache()
+        key = self._key + (_shape_key(args),)
+        exe = cache.get_or_build(
+            key,
+            lambda: jax.jit(self._fn, **self._jit_kwargs).lower(*args).compile())
+        return exe(*args)
+
+    def lower(self, *args):
+        return jax.jit(self._fn, **self._jit_kwargs).lower(*args)
+
+
+def cached_jit(fn: Callable, *, key: tuple, **jit_kwargs) -> CachedFunction:
+    return CachedFunction(fn, key, **jit_kwargs)

@@ -12,6 +12,7 @@ matching operates on exactly this linearization.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
@@ -97,6 +98,12 @@ class Graph:
     def __init__(self, name: str = "graph"):
         self.name = name
         self.nodes: dict[str, Node] = {}
+        # Lazily-built successors index: node name -> consumer names, in
+        # insertion order.  Kept in sync incrementally by add(); any
+        # out-of-band mutation of `nodes`/`inputs` must call
+        # invalidate_index().  This turns consumers() from an O(N) rescan
+        # (O(N^2) across selection/pipeline/executor loops) into O(deg).
+        self._succ: dict[str, list[str]] | None = None
 
     # -- construction -----------------------------------------------------
     def add(self, node: Node) -> Node:
@@ -106,7 +113,24 @@ class Graph:
             if i not in self.nodes:
                 raise ValueError(f"node {node.name} references unknown input {i}")
         self.nodes[node.name] = node
+        if self._succ is not None:
+            self._succ[node.name] = []
+            for i in dict.fromkeys(node.inputs):
+                self._succ[i].append(node.name)
         return node
+
+    def invalidate_index(self) -> None:
+        """Drop the cached successors index after in-place graph surgery."""
+        self._succ = None
+
+    def _successors(self) -> dict[str, list[str]]:
+        if self._succ is None:
+            succ: dict[str, list[str]] = {k: [] for k in self.nodes}
+            for n in self.nodes.values():
+                for i in dict.fromkeys(n.inputs):
+                    succ[i].append(n.name)
+            self._succ = succ
+        return self._succ
 
     # Convenience constructors with FLOP/byte accounting. ----------------
     def input(self, name: str, shape: Iterable[int], dtype: str = "bfloat16") -> Node:
@@ -123,13 +147,15 @@ class Graph:
         return self.add(Node(name, "linear", [x], out, flops, wbytes,
                              {"d_in": d_in, "d_out": d_out, "bias": bias}))
 
-    def matmul(self, name: str, a: str, b: str) -> Node:
+    def matmul(self, name: str, a: str, b: str, *, transpose_b: bool = False) -> Node:
         sa, sb = self.nodes[a].out, self.nodes[b].out
         m = int(math.prod(sa.shape[:-1]))
         k = sa.shape[-1]
-        n = sb.shape[-1]
+        n = sb.shape[-2] if transpose_b else sb.shape[-1]
         out = TensorSpec(sa.shape[:-1] + (n,), sa.dtype)
-        return self.add(Node(name, "matmul", [a, b], out, 2.0 * m * k * n))
+        attrs = {"transpose_b": True} if transpose_b else {}
+        return self.add(Node(name, "matmul", [a, b], out, 2.0 * m * k * n,
+                             0.0, attrs))
 
     def elementwise(self, name: str, xs: list[str], fn: str = "add",
                     flop_per_elem: float = 1.0) -> Node:
@@ -156,7 +182,8 @@ class Graph:
             shape.pop(axis % len(shape))
         out = TensorSpec(tuple(shape), xs.dtype)
         return self.add(Node(name, "reduce", [x], out, float(xs.size),
-                             0.0, {"axis": axis, "red_size": red}))
+                             0.0, {"axis": axis, "red_size": red,
+                                   "keepdims": keepdims}))
 
     def attention(self, name: str, q: str, k: str, v: str, *,
                   causal: bool = True, window: int | None = None) -> Node:
@@ -193,19 +220,15 @@ class Graph:
         return list(self.nodes.values())
 
     def consumers(self, name: str) -> list[Node]:
-        return [n for n in self.nodes.values() if name in n.inputs]
+        return [self.nodes[s] for s in self._successors()[name]]
 
     def successors_map(self) -> dict[str, list[str]]:
-        succ: dict[str, list[str]] = {k: [] for k in self.nodes}
-        for n in self.nodes.values():
-            for i in n.inputs:
-                succ[i].append(n.name)
-        return succ
+        return {k: list(v) for k, v in self._successors().items()}
 
     def is_contiguous(self, members: set[str]) -> bool:
         """Contiguity per Tarnawski et al. [47]: no path leaves the subgraph
         and re-enters it through an external node."""
-        succ = self.successors_map()
+        succ = self._successors()
         # External frontier reachable from members without passing through members.
         frontier = []
         for m in members:
@@ -247,3 +270,16 @@ class Graph:
 
     def __repr__(self):
         return f"Graph({self.name}, {len(self.nodes)} nodes)"
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Stable content hash of a graph's structure + metadata.
+
+    Keys the compiled-artifact cache: two graphs with identical nodes (names,
+    kinds, wiring, shapes, attrs) map to the same executables."""
+    h = hashlib.sha256()
+    for n in g.topo():
+        h.update(repr((n.name, n.kind, tuple(n.inputs), n.out.shape,
+                       n.out.dtype, n.flops, n.weight_bytes,
+                       sorted(n.attrs.items()))).encode())
+    return h.hexdigest()[:16]

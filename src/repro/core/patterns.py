@@ -77,19 +77,27 @@ def _codes(nodes: list[Node]) -> str:
     return "".join(_CODE.get(n.kind, "?") for n in nodes)
 
 
-def _match_patterns(code: str) -> list[str]:
-    return [name for name, pat in PATTERN_LIBRARY.items()
+def _match_patterns(code: str, library: dict[str, str]) -> list[str]:
+    return [name for name, pat in library.items()
             if re.search(pat, code)]
 
 
-def select_subgraphs(graph: Graph, min_size: int = 2) -> Selection:
+def select_subgraphs(graph: Graph, min_size: int = 2,
+                     patterns: "tuple[str, ...] | None" = None) -> Selection:
     """Single-pass sf-node selection over the topological order.
 
     Greedily accumulates maximal runs of non-excluded nodes, breaks runs at
     excluded nodes, then keeps runs that (a) match at least one library
     pattern, (b) satisfy the contiguity criterion, and (c) have >= min_size
     members. Runs failing contiguity are split at the offending node.
+
+    `patterns` restricts matching to a subset of PATTERN_LIBRARY names
+    (None = the whole library); unknown names raise KeyError.
     """
+    if patterns is None:
+        library = PATTERN_LIBRARY
+    else:
+        library = {name: PATTERN_LIBRARY[name] for name in patterns}
     sf_nodes: list[SfNode] = []
     run: list[Node] = []
 
@@ -114,7 +122,7 @@ def select_subgraphs(graph: Graph, min_size: int = 2) -> Selection:
         _emit(segment)
 
     def _emit(segment: list[Node]):
-        pats = _match_patterns(_codes(segment))
+        pats = _match_patterns(_codes(segment), library)
         if not pats:
             return
         sf_nodes.append(SfNode(f"sf{len(sf_nodes)}", [n.name for n in segment], pats))

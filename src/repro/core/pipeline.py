@@ -113,6 +113,7 @@ def _split_reduction(g: Graph, n: Node, fanin: int) -> tuple[Node, Node]:
             node.inputs = [final.name if i == n.name else i for i in node.inputs]
             new_nodes[name] = node
     g.nodes = new_nodes
+    g.invalidate_index()
     return partial, final
 
 
@@ -122,36 +123,76 @@ def _is_epilogue_fusable(prod: Node, cons: Node, n_consumers: int) -> bool:
             and n_consumers == 1)
 
 
-def design_pipeline(selection: Selection,
-                    tile_bytes: int = DEFAULT_TILE_BYTES,
-                    split_reduction_min: int = SPLIT_REDUCTION_MIN) -> PipelinedGraph:
-    """Algorithm 1 over every sf-node of the selection."""
-    g = selection.graph.clone()
-    pipelines: list[Pipeline] = []
+# ---------------------------------------------------------------------------
+# Algorithm 1 as individually-runnable compiler passes.
+#
+# The compiler front-door (core/compiler.py PassManager) runs these as named
+# passes `split_reduction -> create_queues -> epilogue_fuse`; design_pipeline
+# below is the convenience wrapper that runs them back to back.
+# ---------------------------------------------------------------------------
 
+@dataclass
+class OpQueue:
+    """An op-granularity queue intent (pre-epilogue-fusion).
+
+    CreateQueue (Algorithm 1 step 2) operates before stages exist: every
+    intermediate produced and consumed inside the sf-node gets one.  Epilogue
+    fusion later collapses ops into stages; materialize_queues then drops
+    intents whose endpoints landed in one stage and re-keys the rest."""
+    producer: str
+    consumers: list[str]
+    total_bytes: float
+
+
+def split_reductions(selection: Selection,
+                     split_reduction_min: int = SPLIT_REDUCTION_MIN,
+                     ) -> tuple[Graph, dict[str, list[str]]]:
+    """Pass `split_reduction`: rewrite wide reductions in every sf-node into
+    a parallel fan-in stage plus a final combining stage.
+
+    Returns the rewritten working graph (a clone -- the caller's graph is
+    never mutated) and the post-rewrite member list per sf-node."""
+    g = selection.graph.clone()
+    members_of: dict[str, list[str]] = {}
     for sf in selection.sf_nodes:
         members = list(sf.members)
-        # --- step 1: SplitReduction ------------------------------------
         for m in list(members):
             n = g.nodes.get(m)
-            if n is None or n.kind != "reduce":
+            if n is None or n.kind != "reduce" or n.attrs.get("keepdims"):
                 continue
             if n.attrs.get("red_size", 0) >= split_reduction_min:
                 partial, final = _split_reduction(g, n, fanin=min(
                     int(math.sqrt(n.attrs["red_size"])), 16))
                 idx = members.index(m)
                 members[idx:idx + 1] = [partial.name, final.name]
+        members_of[sf.name] = members
+    return g, members_of
 
-        mset = set(members)
 
-        # --- step 3 (done first so queues connect *stages*): epilogue fusion
-        stages: list[Stage] = []
-        op_to_stage: dict[str, Stage] = {}
-        for m in members:
-            n = g.nodes[m]
-            cons = g.consumers(n.name)
-            fused = False
-            # fuse into producer stage if trivially fusable
+def plan_queues(g: Graph, members: list[str]) -> list[OpQueue]:
+    """Pass `create_queues`: one queue intent per intra-sf intermediate."""
+    mset = set(members)
+    out: list[OpQueue] = []
+    for m in members:
+        internal = [c.name for c in g.consumers(m) if c.name in mset]
+        if internal:
+            out.append(OpQueue(m, internal, float(g.nodes[m].out.nbytes)))
+    return out
+
+
+def fuse_epilogues(g: Graph, sf_name: str, members: list[str],
+                   enable: bool = True) -> tuple[list[Stage], dict[str, Stage]]:
+    """Pass `epilogue_fuse`: group member ops into pipeline stages.
+
+    Trivially-fusable ops (cheap VPU op directly after a GEMM with a single
+    consumer) collapse into the producer stage; with enable=False every op
+    becomes its own stage (the unfused pipeline, useful for pass ablation)."""
+    stages: list[Stage] = []
+    op_to_stage: dict[str, Stage] = {}
+    for m in members:
+        n = g.nodes[m]
+        fused = False
+        if enable:
             for i in n.inputs:
                 if i in op_to_stage:
                     prod_stage = op_to_stage[i]
@@ -161,35 +202,52 @@ def design_pipeline(selection: Selection,
                         op_to_stage[n.name] = prod_stage
                         fused = True
                         break
-            if not fused:
-                st = Stage(f"{sf.name}.s{len(stages)}", [n], n.resource)
-                stages.append(st)
-                op_to_stage[n.name] = st
+        if not fused:
+            st = Stage(f"{sf_name}.s{len(stages)}", [n], n.resource)
+            stages.append(st)
+            op_to_stage[n.name] = st
+    return stages, op_to_stage
 
-        # --- step 2: CreateQueue for intra-sf intermediates --------------
-        queues: list[QueueSpec] = []
-        edges: dict[str, list[str]] = {s.name: [] for s in stages}
-        for m in members:
-            n = g.nodes[m]
-            cons = [c for c in g.consumers(n.name)]
-            internal = [c for c in cons if c.name in mset]
-            if not internal:
-                continue
-            src = op_to_stage[n.name]
-            dsts = {op_to_stage[c.name].name for c in internal
-                    if op_to_stage[c.name] is not src}
-            if not dsts:
-                continue  # consumer fused into same stage: register/VMEM local
-            q = QueueSpec(
-                name=f"{sf.name}.q{len(queues)}",
-                producer=src.name,
-                consumers=sorted(dsts),
-                payload_bytes=tile_bytes,
-                total_bytes=float(n.out.nbytes),
-            )
-            queues.append(q)
-            edges[src.name] = sorted(set(edges[src.name]) | dsts)
 
+def materialize_queues(sf_name: str, stages: list[Stage],
+                       op_queues: list[OpQueue],
+                       op_to_stage: dict[str, Stage],
+                       tile_bytes: int = DEFAULT_TILE_BYTES,
+                       ) -> tuple[list[QueueSpec], dict[str, list[str]]]:
+    """Bind op-granularity queue intents to stage endpoints.
+
+    Intents whose producer and all consumers were epilogue-fused into one
+    stage vanish (the value stays in registers/VMEM of that stage)."""
+    queues: list[QueueSpec] = []
+    edges: dict[str, list[str]] = {s.name: [] for s in stages}
+    for oq in op_queues:
+        src = op_to_stage[oq.producer]
+        dsts = {op_to_stage[c].name for c in oq.consumers
+                if op_to_stage[c] is not src}
+        if not dsts:
+            continue  # consumer fused into same stage: register/VMEM local
+        queues.append(QueueSpec(
+            name=f"{sf_name}.q{len(queues)}",
+            producer=src.name,
+            consumers=sorted(dsts),
+            payload_bytes=tile_bytes,
+            total_bytes=oq.total_bytes,
+        ))
+        edges[src.name] = sorted(set(edges[src.name]) | dsts)
+    return queues, edges
+
+
+def design_pipeline(selection: Selection,
+                    tile_bytes: int = DEFAULT_TILE_BYTES,
+                    split_reduction_min: int = SPLIT_REDUCTION_MIN) -> PipelinedGraph:
+    """Algorithm 1 over every sf-node: the three passes back to back."""
+    g, members_of = split_reductions(selection, split_reduction_min)
+    pipelines: list[Pipeline] = []
+    for sf in selection.sf_nodes:
+        members = members_of[sf.name]
+        op_queues = plan_queues(g, members)
+        stages, op_to_stage = fuse_epilogues(g, sf.name, members)
+        queues, edges = materialize_queues(sf.name, stages, op_queues,
+                                           op_to_stage, tile_bytes)
         pipelines.append(Pipeline(sf.name, stages, queues, sf, edges))
-
     return PipelinedGraph(g, pipelines)

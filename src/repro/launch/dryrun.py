@@ -13,6 +13,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, applicable_shapes, get_config
 from repro.configs.base import SHAPES
+from repro.core.executor import executable_cache
 from repro.distributed.sharding import Sharder
 from repro.launch.inputs import input_specs, params_specs
 from repro.launch.mesh import make_production_mesh
@@ -141,7 +142,20 @@ def cache_shardings(sharder: Sharder, cache_sds: dict) -> dict:
 # ---------------------------------------------------------------------------
 
 def _lower_cell(cfg, shape_name: str, mesh, *, opt_kind: str):
-    """Lower + compile one (config x shape) on `mesh`; returns compiled."""
+    """Lower + compile one (config x shape) on `mesh`; returns compiled.
+
+    Trace+lower+compile all go through the compiler's process-wide
+    executable cache, so a cell revisited in one invocation (e.g. the same
+    calibration depth across mesh variants) skips XLA entirely.  The key
+    hashes the FULL config contents (not just its name: calibration cells
+    reuse the name with replaced fields)."""
+    key = ("dryrun", repr(cfg), shape_name, tuple(mesh.shape.items()),
+           opt_kind)
+    return executable_cache().get_or_build(
+        key, lambda: _build_cell(cfg, shape_name, mesh, opt_kind=opt_kind))
+
+
+def _build_cell(cfg, shape_name: str, mesh, *, opt_kind: str):
     shape = SHAPES[shape_name]
     sharder = Sharder(mesh)
     model = get_model(cfg)
@@ -206,6 +220,8 @@ def _lower_cell(cfg, shape_name: str, mesh, *, opt_kind: str):
 
 def _cost_triple(compiled) -> tuple[float, float, float]:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll["total"])

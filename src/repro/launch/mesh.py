@@ -7,14 +7,22 @@ by dryrun.py before any jax import.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed in newer jax; older builds default to Auto anyway
+    from jax.sharding import AxisType
+
+    def _axis_types_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - version compat
+    def _axis_types_kw(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_mesh_for(devices: int, model_parallel: int = 16):
@@ -23,4 +31,4 @@ def make_mesh_for(devices: int, model_parallel: int = 16):
     while devices % model:
         model -= 1
     return jax.make_mesh((devices // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **_axis_types_kw(2))

@@ -17,9 +17,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.checkpoint import Checkpointer
+from repro.launch.mesh import _axis_types_kw
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.distributed.sharding import NULL, Sharder
@@ -48,8 +48,7 @@ def main():
     n_dev = args.mesh_data * args.mesh_model
     if n_dev > 1:
         mesh = jax.make_mesh((args.mesh_data, args.mesh_model),
-                             ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+                             ("data", "model"), **_axis_types_kw(2))
         sharder = Sharder(mesh)
     else:
         sharder = NULL

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.compiler import cached_jit
 from repro.distributed.sharding import NULL
 from repro.kernels import KernelConfig
 from repro.models import get_model
@@ -77,8 +78,16 @@ class ServingEngine:
         self.cache = self.model.init_cache(sc.batch, sc.max_len)
         self.tokens = jnp.zeros((sc.batch,), jnp.int32)
         self.pos = jnp.zeros((), jnp.int32)
-        self._step = jax.jit(functools.partial(
-            serve_step, cfg=cfg, kernels=kernels, sharder=sharder))
+        # Decode tick through the compiler's executable cache: the first
+        # tick per (batch, cache shape) lowers+compiles; every later tick --
+        # and every later engine with the same config -- reuses the cached
+        # executable instead of re-jitting (repro.compile()'s hot-path
+        # contract applied to the serving loop).
+        self._step = cached_jit(
+            functools.partial(serve_step, cfg=cfg, kernels=kernels,
+                              sharder=sharder),
+            key=("serve_step", cfg.name, sc.batch, sc.max_len, repr(kernels),
+                 str(getattr(sharder, "mesh", "null"))))
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, request_id: int, prompt: list[int]):

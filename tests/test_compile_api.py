@@ -1,0 +1,326 @@
+"""Tests for the `repro.compile()` front-door (core/compiler.py).
+
+Golden invariants:
+  * bsp / vertical / kitsune are numerically identical on (tiny instances
+    of) the paper's five challenge apps,
+  * a second CompiledApp.run() with same-shaped feeds performs ZERO new
+    jax.jit lowerings (asserted via the lowering counter), and the
+    executable cache hands back the SAME compiled objects,
+  * PassManager ordering / disabling / timing / dump hooks work.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import CompilerOptions
+from repro.core.compiler import PASS_NAMES
+from repro.core.executor import executable_cache, lowering_count
+
+from benchmarks import apps
+
+
+# --------------------------------------------------------------------------
+# tiny-but-faithful instances of the five challenge apps + feed builders
+# --------------------------------------------------------------------------
+
+def _tiny_dlrm():
+    g = apps.dlrm(batch=16, emb_rows=64)
+    feeds = {
+        "dense_x": jax.random.normal(jax.random.PRNGKey(1), (16, 13), jnp.float32),
+        "sparse_ids": jax.random.randint(jax.random.PRNGKey(2), (16, 8), 0, 64),
+    }
+    return g, feeds
+
+
+def _tiny_mgn():
+    g = apps.meshgraphnets(batch=16, steps=1)
+    feeds = {
+        "nodes": jax.random.normal(jax.random.PRNGKey(1), (16, 128), jnp.float32),
+        "edges": jax.random.normal(jax.random.PRNGKey(2), (48, 128), jnp.float32),
+        "edge_idx": jax.random.randint(jax.random.PRNGKey(3), (48,), 0, 16),
+    }
+    return g, feeds
+
+
+def _tiny_nerf():
+    g = apps.nerf(rays=4, samples=4)
+    feeds = {
+        "pts": jax.random.normal(jax.random.PRNGKey(1), (16, 60), jnp.float32),
+        "view": jax.random.normal(jax.random.PRNGKey(2), (16, 24), jnp.float32),
+    }
+    return g, feeds
+
+
+def _tiny_graphcast():
+    g = apps.graphcast(nodes=16, hidden=16, steps=1)
+    feeds = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (16, 256), jnp.float32),
+        "mesh_idx": jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 16),
+    }
+    return g, feeds
+
+
+def _tiny_llama():
+    # hkv == hq: the GQA head expansion is modeled, not materialized
+    g = apps.llama3_8b(seq=4, batch=2, n_layers=1, d=16, ff=32,
+                       hq=2, hkv=2, hd=8, vocab=32)
+    feeds = {"ids": jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, 32)}
+    return g, feeds
+
+
+TINY_APPS = {
+    "dlrm": _tiny_dlrm,
+    "mgn": _tiny_mgn,
+    "nerf": _tiny_nerf,
+    "graphcast": _tiny_graphcast,
+    "llama": _tiny_llama,
+}
+
+
+def mlp_graph(m=64, d=32, h=128):
+    g = repro.Graph("mlp")
+    g.input("x", (m, d), "float32")
+    g.linear("fc1", "x", h)
+    g.elementwise("act", ["fc1"], "gelu", flop_per_elem=8)
+    g.linear("fc2", "act", d)
+    g.output("y", "fc2")
+    return g
+
+
+def reduction_graph(b=64, m=32, n=16):
+    g = repro.Graph("red")
+    g.input("x", (b, m, n), "float32")
+    g.elementwise("sq", ["x", "x"], "mul")
+    g.reduce("batch_sum", "sq", axis=0)
+    g.output("y", "batch_sum")
+    return g
+
+
+# --------------------------------------------------------------------------
+# golden three-mode equivalence on the five challenge apps
+# --------------------------------------------------------------------------
+
+class TestModeEquivalence:
+    @pytest.mark.parametrize("name", sorted(TINY_APPS))
+    def test_three_modes_numerically_identical(self, name):
+        g, feeds = TINY_APPS[name]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        outs = {}
+        for mode in ("bsp", "vertical", "kitsune"):
+            app = repro.compile(g, CompilerOptions(mode=mode))
+            outs[mode] = app.run(feeds, params).outputs
+        assert outs["bsp"], name
+        for mode in ("vertical", "kitsune"):
+            assert outs[mode].keys() == outs["bsp"].keys(), (name, mode)
+            for k in outs["bsp"]:
+                np.testing.assert_allclose(
+                    np.asarray(outs["bsp"][k], np.float32),
+                    np.asarray(outs[mode][k], np.float32),
+                    rtol=2e-3, atol=2e-3,
+                    err_msg=f"{name}: bsp vs {mode} differ on {k}")
+
+    def test_kitsune_fuses_and_reduces_traffic(self):
+        g, feeds = _tiny_nerf()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        b = repro.compile(g, mode="bsp").run(feeds, params)
+        k = repro.compile(g, mode="kitsune").run(feeds, params)
+        assert k.n_programs < b.n_programs
+        assert k.bytes_accessed < b.bytes_accessed
+
+    def test_vertical_is_one_program(self):
+        g, feeds = _tiny_nerf()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        v = repro.compile(g, mode="vertical").run(feeds, params)
+        assert v.n_programs == 1
+
+
+# --------------------------------------------------------------------------
+# compiled-artifact caching
+# --------------------------------------------------------------------------
+
+class TestExecutableCache:
+    def test_second_run_zero_lowerings(self):
+        g = mlp_graph()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
+        app = repro.compile(g, CompilerOptions(mode="kitsune"))
+        app.run({"x": x}, params)
+        before = lowering_count()
+        rep = app.run({"x": x}, params)
+        assert lowering_count() == before, "hot path re-lowered"
+        assert rep.cache_misses == 0 and rep.cache_hits == rep.n_programs
+
+    def test_recompile_same_graph_reuses_executables(self):
+        g = mlp_graph(m=48, d=16, h=64)
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (48, 16), jnp.float32)
+        app1 = repro.compile(g, CompilerOptions(mode="kitsune"))
+        app1.run({"x": x}, params)
+        keys1 = app1.executables()
+        assert keys1
+        objs1 = {k: executable_cache().get(k) for k in keys1}
+        before = lowering_count()
+        # a FRESH compile of an identical graph: same fingerprint+options
+        app2 = repro.compile(mlp_graph(m=48, d=16, h=64),
+                             CompilerOptions(mode="kitsune"))
+        rep = app2.run({"x": x}, params)
+        assert lowering_count() == before
+        assert rep.cache_misses == 0
+        assert app2.executables() == keys1
+        for k in keys1:  # the very same compiled objects, not re-built ones
+            assert executable_cache().get(k) is objs1[k]
+
+    def test_new_shapes_lower_once(self):
+        g = mlp_graph(m=40, d=24, h=48)
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        app = repro.compile(g, mode="bsp")
+        x32 = jax.random.normal(jax.random.PRNGKey(1), (40, 24), jnp.float32)
+        app.run({"x": x32}, params)
+        before = lowering_count()
+        # same shapes, different values: still cached
+        app.run({"x": x32 + 1.0}, params)
+        assert lowering_count() == before
+
+    def test_modes_do_not_share_cache_entries(self):
+        g = mlp_graph(m=56, d=8, h=24)
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (56, 8), jnp.float32)
+        a1 = repro.compile(g, mode="bsp")
+        a2 = repro.compile(g, mode="vertical")
+        a1.run({"x": x}, params)
+        a2.run({"x": x}, params)
+        assert not set(a1.executables()) & set(a2.executables())
+
+
+# --------------------------------------------------------------------------
+# pass manager: ordering, disabling, timing, dump hook
+# --------------------------------------------------------------------------
+
+class TestPassManager:
+    def test_default_order_and_timing(self):
+        app = repro.compile(mlp_graph())
+        names = [r.name for r in app.pass_records]
+        assert names == list(PASS_NAMES)
+        assert all(r.seconds >= 0 for r in app.pass_records)
+        assert all(not r.disabled for r in app.pass_records)
+
+    def test_dump_hook_called_per_pass(self):
+        seen = []
+        repro.compile(mlp_graph(), CompilerOptions(
+            dump_ir=lambda name, state: seen.append(name)))
+        assert seen == list(PASS_NAMES)
+
+    def test_disable_split_reduction(self):
+        g = reduction_graph()
+        app = repro.compile(g, CompilerOptions(disable=("split_reduction",)))
+        kinds = [n.kind for n in app.pipelined.graph.topo()]
+        assert "reduce_partial" not in kinds and "reduce" in kinds
+        app_on = repro.compile(g)
+        kinds_on = [n.kind for n in app_on.pipelined.graph.topo()]
+        assert "reduce_partial" in kinds_on and "reduce" not in kinds_on
+
+    def test_disable_epilogue_fuse_gives_one_stage_per_op(self):
+        g = mlp_graph()
+        fused = repro.compile(g)
+        unfused = repro.compile(g, CompilerOptions(disable=("epilogue_fuse",)))
+        assert len(fused.pipelined.pipelines[0].stages) == 2
+        assert len(unfused.pipelined.pipelines[0].stages) == 3
+
+    def test_disable_balance(self):
+        app = repro.compile(mlp_graph(), CompilerOptions(balance=False))
+        assert app.balance_results == {}
+        rec = {r.name: r for r in app.pass_records}
+        assert rec["balance"].disabled
+
+    def test_balance_allocates_all_units(self):
+        from repro.core import MXU, v5e_mesh
+        app = repro.compile(mlp_graph(), CompilerOptions(hw=v5e_mesh(8)))
+        res = app.balance_results["sf0"]
+        pipe = app.pipelined.pipelines[0]
+        mxu = sum(res.allocation[s.name] for s in pipe.stages
+                  if s.resource == MXU)
+        assert mxu == 8
+
+    def test_custom_pass_order_still_correct(self):
+        pm = repro.PassManager(("select", "epilogue_fuse", "split_reduction",
+                                "create_queues", "balance"))
+        app = repro.compile(reduction_graph(), pass_manager=pm)
+        assert [r.name for r in app.pass_records] == [
+            "select", "epilogue_fuse", "split_reduction", "create_queues",
+            "balance"]
+        # split_reduction invalidated the earlier fuse; result matches default
+        default = repro.compile(reduction_graph())
+        assert ([len(p.stages) for p in app.pipelined.pipelines]
+                == [len(p.stages) for p in default.pipelined.pipelines])
+        assert ([len(p.queues) for p in app.pipelined.pipelines]
+                == [len(p.queues) for p in default.pipelined.pipelines])
+
+    def test_select_after_structural_pass_rebuilds_derived_state(self):
+        # split_reduction first forces the empty default selection; select
+        # must invalidate the derived state or _ensure_pipelined KeyErrors
+        pm = repro.PassManager(("split_reduction", "select", "create_queues",
+                                "epilogue_fuse", "balance"))
+        app = repro.compile(mlp_graph(), pass_manager=pm)
+        assert len(app.pipelined.pipelines) == 1
+        assert len(app.pipelined.pipelines[0].stages) == 2
+
+    def test_unknown_pass_rejected(self):
+        with pytest.raises(ValueError):
+            repro.PassManager(("select", "frobnicate"))
+        with pytest.raises(ValueError):
+            CompilerOptions(disable=("frobnicate",))
+
+    def test_pattern_subset(self):
+        g = mlp_graph()
+        app = repro.compile(g, CompilerOptions(patterns=("mlp",)))
+        assert app.selection.sf_nodes[0].matched_patterns == ["mlp"]
+        none = repro.compile(g, CompilerOptions(patterns=("reduce_tail",)))
+        assert none.selection.sf_nodes == []
+        with pytest.raises(ValueError):
+            CompilerOptions(patterns=("not_a_pattern",))
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError):
+            CompilerOptions(mode="warp")
+
+
+# --------------------------------------------------------------------------
+# artifact surface
+# --------------------------------------------------------------------------
+
+class TestCompiledApp:
+    def test_estimate_matches_evaluate(self):
+        from repro.core import design_pipeline, evaluate, select_subgraphs, \
+            v5e_mesh
+        g = mlp_graph(m=256, d=64, h=512)
+        hw = v5e_mesh(8)
+        app = repro.compile(g, CompilerOptions(hw=hw))
+        direct = evaluate(design_pipeline(select_subgraphs(g)), hw, "kitsune")
+        assert app.estimate().time == pytest.approx(direct.time)
+
+    def test_describe_mentions_passes_and_stages(self):
+        app = repro.compile(mlp_graph())
+        text = app.describe()
+        for name in PASS_NAMES:
+            assert name in text
+        assert "pipeline sf0" in text
+
+    def test_keyword_overrides(self):
+        app = repro.compile(mlp_graph(), mode="vertical")
+        assert app.options.mode == "vertical"
+        app2 = repro.compile(mlp_graph(), CompilerOptions(mode="bsp"),
+                             mode="kitsune")
+        assert app2.options.mode == "kitsune"
+
+    def test_fingerprint_stability(self):
+        assert (repro.graph_fingerprint(mlp_graph())
+                == repro.graph_fingerprint(mlp_graph()))
+        assert (repro.graph_fingerprint(mlp_graph(h=64))
+                != repro.graph_fingerprint(mlp_graph(h=128)))
+
+    def test_missing_feed_raises(self):
+        app = repro.compile(mlp_graph())
+        with pytest.raises(KeyError):
+            app.run({}, {})

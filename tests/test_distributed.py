@@ -31,11 +31,11 @@ class TestSpatialPipeline:
     def test_matches_sequential(self):
         out = run("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
+            from repro.launch.mesh import _axis_types_kw
             from repro.core.queue import make_spatial_pipeline
             n_stages, n_micro, d = 4, 6, 16
             mesh = jax.make_mesh((n_stages,), ("stage",),
-                                 axis_types=(AxisType.Auto,))
+                                 **_axis_types_kw(1))
             def stage_fn(p, x):
                 return jnp.tanh(x @ p["w"])
             key = jax.random.PRNGKey(0)
@@ -55,10 +55,14 @@ class TestSpatialPipeline:
     def test_ring_push_rotates(self):
         out = run("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType, PartitionSpec as P
+            from jax.sharding import PartitionSpec as P
+            from repro.launch.mesh import _axis_types_kw
             from repro.core.queue import ring_push
-            from jax import shard_map
-            mesh = jax.make_mesh((8,), ("stage",), axis_types=(AxisType.Auto,))
+            try:
+                from jax import shard_map
+            except ImportError:
+                from jax.experimental.shard_map import shard_map
+            mesh = jax.make_mesh((8,), ("stage",), **_axis_types_kw(1))
             def f(x):
                 return ring_push(x, "stage", 8)
             y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("stage"),
@@ -74,13 +78,13 @@ class TestShardedTrainStep:
     def test_reduced_arch_sharded_step(self):
         out = run("""
             import jax, jax.numpy as jnp
-            from jax.sharding import AxisType
+            from repro.launch.mesh import _axis_types_kw
             from repro.configs import get_config
             from repro.distributed.sharding import Sharder
             from repro.optim import adamw
             from repro.train import TrainConfig, make_train_state, make_train_step
             mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+                                 **_axis_types_kw(2))
             sharder = Sharder(mesh)
             cfg = get_config("gemma3-1b").reduced()
             opt = adamw(1e-3)
@@ -105,12 +109,12 @@ class TestShardedTrainStep:
     def test_moe_ep_sharding(self):
         out = run("""
             import jax, jax.numpy as jnp
-            from jax.sharding import AxisType
+            from repro.launch.mesh import _axis_types_kw
             from repro.configs import get_config
             from repro.distributed.sharding import Sharder
             from repro.models import get_model
             mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+                                 **_axis_types_kw(2))
             sharder = Sharder(mesh)
             cfg = get_config("grok-1-314b").reduced()   # 4 experts % 4 == 0 -> EP
             model = get_model(cfg)
@@ -131,10 +135,14 @@ class TestCompression:
     def test_error_feedback_allreduce(self):
         out = run("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType, PartitionSpec as P
-            from jax import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.launch.mesh import _axis_types_kw
+            try:
+                from jax import shard_map
+            except ImportError:
+                from jax.experimental.shard_map import shard_map
             from repro.optim.compression import error_feedback_allreduce, init_residuals
-            mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+            mesh = jax.make_mesh((8,), ("data",), **_axis_types_kw(1))
             g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
             def f(gl, rl):
@@ -162,11 +170,11 @@ class TestModelPipeline:
         ICI ring) == sequential application."""
         out = run("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
+            from repro.launch.mesh import _axis_types_kw
             from repro.distributed.pipeline import run_pipelined
             n_layers, n_stages, n_micro, d = 8, 4, 6, 32
             mesh = jax.make_mesh((n_stages,), ("stage",),
-                                 axis_types=(AxisType.Auto,))
+                                 **_axis_types_kw(1))
             def layer_fn(p, x):
                 return x + jnp.tanh(x @ p["w"]) * 0.5
             params = {"w": jax.random.normal(
@@ -188,7 +196,7 @@ class TestElastic:
     def test_restore_across_mesh_shapes(self, tmp_path):
         out = run(f"""
             import jax, jax.numpy as jnp
-            from jax.sharding import AxisType
+            from repro.launch.mesh import _axis_types_kw
             from repro.checkpoint import Checkpointer, restore_with_resharding
             from repro.configs import get_config
             from repro.distributed.sharding import Sharder
@@ -198,7 +206,7 @@ class TestElastic:
             params = model.init(jax.random.PRNGKey(0))
             # save from a (4, 2) mesh
             m1 = jax.make_mesh((4, 2), ("data", "model"),
-                               axis_types=(AxisType.Auto,) * 2)
+                               **_axis_types_kw(2))
             s1 = Sharder(m1)
             p1 = jax.tree.map(jax.device_put, params,
                               s1.params_shardings(params))
@@ -206,7 +214,7 @@ class TestElastic:
             ck.save(5, {{"params": p1}})
             # restore onto a (2, 4) mesh -- elastic reshard
             m2 = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(AxisType.Auto,) * 2)
+                               **_axis_types_kw(2))
             s2 = Sharder(m2)
             step, out = restore_with_resharding(
                 r"{tmp_path}", {{"params": params}},

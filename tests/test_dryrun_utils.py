@@ -86,11 +86,11 @@ class TestCollectiveParsing:
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
             import dataclasses, jax
-            from jax.sharding import AxisType
             from repro.launch import dryrun
+            from repro.launch.mesh import _axis_types_kw
             from repro.configs import get_config
             mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+                                 **_axis_types_kw(2))
             cfg = dataclasses.replace(
                 get_config("gemma3-1b"), n_layers=2, window_pattern="LG",
                 vocab=2048, d_ff=512, d_model=256, n_heads=4, n_kv_heads=1,
