@@ -32,7 +32,35 @@ def analyze(graph):
     }
 
 
-def main(csv=True):
+def zoo_coverage(names=None, csv=True, batch=1, seq=16):
+    """--zoo axis: fusion coverage + traffic reduction on TRACED zoo graphs
+    (the jaxpr importer feeding the same Table-2 analysis as the apps)."""
+    from repro.models import zoo as zoo_mod
+    rows = {}
+    for name in names or zoo_mod.names():
+        zf = zoo_mod.build(name, batch=batch, seq=seq)
+        t0 = time.perf_counter_ns()
+        app = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", hw=HW))
+        grouped, total = app.selection.coverage()
+        bsp = app.estimate(HW, "bsp")
+        kit = app.estimate(HW, "kitsune")
+        us = (time.perf_counter_ns() - t0) / 1e3
+        rows[name] = {
+            "ops": total, "grouped": grouped,
+            "coverage": grouped / max(total, 1),
+            "traffic_red_kitsune": 1 - kit.dram_bytes / max(bsp.dram_bytes, 1),
+        }
+        if csv:
+            r = rows[name]
+            print(f"coverage_zoo_{name},{us:.0f},ops={r['ops']}"
+                  f";cov={r['coverage']:.2f}"
+                  f";tr_kit={r['traffic_red_kitsune']:.3f}")
+        assert rows[name]["traffic_red_kitsune"] >= -1e-9, name
+    return rows
+
+
+def main(csv=True, zoo=None):
     results = {}
     for name, make in APPS.items():
         g = make()
@@ -63,8 +91,16 @@ def main(csv=True):
         inf = r["inference"]
         assert inf["traffic_red_kitsune"] >= inf["traffic_red_vertical"] - 1e-9, name
     assert results["nerf"]["inference"]["coverage"] >= 0.9   # paper: 100%
+    if zoo is not None:
+        results["zoo"] = zoo_coverage(zoo or None, csv=csv)
     return results
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--zoo", nargs="*", default=None, metavar="ARCH",
+                    help="also run the traced config-zoo axis "
+                         "(no names = every architecture)")
+    a = ap.parse_args()
+    main(zoo=a.zoo)

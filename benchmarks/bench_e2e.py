@@ -22,7 +22,36 @@ def e2e(graph):
     return t_b / t_v, t_b / t_k
 
 
-def main(csv=True):
+def zoo_e2e(names=None, csv=True, batch=1, seq=16):
+    """--zoo axis: end-to-end model speedups on TRACED config-zoo graphs.
+
+    Each architecture is built by models/zoo.py, captured through the jaxpr
+    importer (reduced dims -- the graph structure, not the arithmetic scale,
+    drives the speedup ratios), and estimated in all three modes."""
+    from repro.models import zoo as zoo_mod
+    rows = {}
+    for name in names or zoo_mod.names():
+        t0 = time.perf_counter_ns()
+        zf = zoo_mod.build(name, batch=batch, seq=seq)
+        app = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", hw=HW))
+        t_b = app.estimate(HW, "bsp").time
+        t_v = app.estimate(HW, "vertical").time
+        t_k = app.estimate(HW, "kitsune").time
+        us = (time.perf_counter_ns() - t0) / 1e3
+        grouped, total = app.selection.coverage()
+        rows[name] = {"vertical": t_b / t_v, "kitsune": t_b / t_k,
+                      "coverage": grouped / max(total, 1),
+                      "nodes": len(app.graph.nodes)}
+        if csv:
+            print(f"e2e_zoo_{name},{us:.0f},"
+                  f"vertical={t_b / t_v:.2f};kitsune={t_b / t_k:.2f}"
+                  f";cov={grouped / max(total, 1):.2f}")
+        assert t_b / t_k >= 0.9, (name, t_b / t_k)  # kitsune never pathological
+    return rows
+
+
+def main(csv=True, zoo=None):
     inf, tr = [], []
     for name, make in APPS.items():
         t0 = time.perf_counter_ns()
@@ -45,8 +74,16 @@ def main(csv=True):
     if csv:
         print(f"e2e_geomean,0,inference={gm_i:.2f};training={gm_t:.2f}"
               f";paper_inf=1.3-2.3;paper_train=1.1-2.4")
+    if zoo is not None:
+        zoo_e2e(zoo or None, csv=csv)
     return gm_i, gm_t
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--zoo", nargs="*", default=None, metavar="ARCH",
+                    help="also run the traced config-zoo axis "
+                         "(no names = every architecture)")
+    a = ap.parse_args()
+    main(zoo=a.zoo)

@@ -1,12 +1,76 @@
 """Benchmark driver: one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines."""
+Prints ``name,us_per_call,derived`` CSV lines.
+
+``--smoke`` runs a tiny-shape subset (apps e2e/coverage + two traced
+config-zoo architectures) and writes the results as JSON -- the CI artifact
+that accumulates a BENCH_*.json trajectory across commits."""
 from __future__ import annotations
 
+import json
 import sys
+import time
 import traceback
 
 
+def smoke(out_path: str = "BENCH_smoke.json") -> dict:
+    import repro
+    from repro import CompilerOptions
+    from repro.models import zoo
+    from . import bench_coverage, bench_e2e
+    zoo_names = ["gemma3-1b", "qwen1.5-32b"]
+    t0 = time.time()
+    gm_i, gm_t = bench_e2e.main(csv=False)
+    apps_cov = bench_coverage.main(csv=False)
+    # one trace+compile per arch; e2e ratios and coverage from the same app
+    hw = bench_e2e.HW
+    zoo_e2e, zoo_cov = {}, {}
+    for name in zoo_names:
+        zf = zoo.build(name, batch=1, seq=16)
+        app = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", hw=hw))
+        bsp = app.estimate(hw, "bsp")
+        kit = app.estimate(hw, "kitsune")
+        grouped, total = app.selection.coverage()
+        zoo_e2e[name] = {
+            "vertical": bsp.time / app.estimate(hw, "vertical").time,
+            "kitsune": bsp.time / kit.time,
+            "coverage": grouped / max(total, 1),
+            "nodes": len(app.graph.nodes)}
+        zoo_cov[name] = {
+            "ops": total, "grouped": grouped,
+            "coverage": grouped / max(total, 1),
+            "traffic_red_kitsune":
+                1 - kit.dram_bytes / max(bsp.dram_bytes, 1)}
+    results = {
+        "schema": 1,
+        "kind": "smoke",
+        "unix_time": time.time(),
+        "wall_s": time.time() - t0,
+        "e2e_geomean": {"inference": gm_i, "training": gm_t},
+        "apps_coverage": {
+            name: r["inference"] for name, r in apps_cov.items()},
+        "zoo_e2e": zoo_e2e,
+        "zoo_coverage": zoo_cov,
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# smoke results -> {out_path} "
+          f"(e2e geomean inf={gm_i:.2f} train={gm_t:.2f}, "
+          f"zoo={list(zoo_e2e)})")
+    return results
+
+
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape subset, results written as JSON")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="JSON path for --smoke results")
+    ns = ap.parse_args()
+    if ns.smoke:
+        smoke(ns.out)
+        return
     from . import (bench_coverage, bench_e2e, bench_kernels, bench_queue,
                    bench_roofline, bench_sensitivity, bench_subgraph,
                    bench_utilization)

@@ -61,6 +61,26 @@ def main():
     assert repro.lowering_count() == before, "hot path re-lowered!"
     print(f"  cache: second run() hit {k.n_programs} cached executables, "
           f"0 new lowerings")
+
+    # 6. ANY jax function via the capture front-end: a tiny gemma3 from the
+    # config zoo, traced into the same pipeline (jaxpr -> Graph, layer scan
+    # unrolled, attention kept atomic, weights as captured consts)
+    from repro.models import zoo
+    zf = zoo.build("gemma3-1b", batch=1, seq=16)
+    traced = repro.compile(zf.fn, zf.example_inputs,
+                           CompilerOptions(mode="kitsune", hw=hw))
+    logits = traced(*zf.example_inputs)           # callable like the raw fn
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(zf.fn(*zf.example_inputs), np.float32),
+        rtol=2e-4, atol=2e-4)
+    grouped, total = traced.selection.coverage()
+    before = repro.lowering_count()
+    traced(*zf.example_inputs)
+    assert repro.lowering_count() == before, "traced hot path re-lowered!"
+    print(f"  traced gemma3-1b: {len(traced.graph.nodes)} nodes, "
+          f"coverage {grouped}/{total}, outputs match the raw jax fn, "
+          f"0 relowerings on the second call")
     print("quickstart OK")
 
 

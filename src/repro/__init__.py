@@ -7,11 +7,13 @@ Front door:
     report = app.run(feeds, params)
 """
 from .api import (CachedFunction, CompiledApp, CompilerOptions, Graph, Node,
-                  PassManager, TensorSpec, cached_jit, compile,
-                  graph_fingerprint, init_params, lowering_count)
+                  PassManager, TensorSpec, TracedApp, TracedFunction, atomic,
+                  cached_jit, compile, graph_fingerprint, init_params,
+                  lowering_count, trace)
 
 __all__ = [
     "compile", "CompilerOptions", "CompiledApp", "PassManager",
     "cached_jit", "CachedFunction", "init_params", "lowering_count",
     "Graph", "Node", "TensorSpec", "graph_fingerprint",
+    "trace", "TracedFunction", "TracedApp", "atomic",
 ]

@@ -13,12 +13,13 @@ feeds perform zero new lowerings.  The same cache backs `cached_jit`, the
 entrypoint the serving/launch stacks use for non-graph jax callables.
 """
 from .core.compiler import (CachedFunction, CompiledApp, CompilerOptions,
-                            CompileState, PassManager, PassRecord, cached_jit,
-                            compile)
+                            CompileState, PassManager, PassRecord, TracedApp,
+                            cached_jit, compile)
 from .core.executor import (ExecutionReport, GraphExecutor,
                             clear_executable_cache, executable_cache,
                             init_params, lowering_count)
 from .core.graph import Graph, Node, TensorSpec, graph_fingerprint
+from .core.trace import TracedFunction, atomic, trace
 
 __all__ = [
     "compile", "CompilerOptions", "CompiledApp", "CompileState",
@@ -26,4 +27,5 @@ __all__ = [
     "ExecutionReport", "GraphExecutor", "init_params",
     "executable_cache", "clear_executable_cache", "lowering_count",
     "Graph", "Node", "TensorSpec", "graph_fingerprint",
+    "trace", "TracedFunction", "TracedApp", "atomic",
 ]

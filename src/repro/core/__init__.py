@@ -34,9 +34,11 @@ from .executor import (GraphExecutor, ExecutorBackend, BSPBackend,
                        ExecutionReport, init_params, compare_traffic,
                        executable_cache, clear_executable_cache,
                        lowering_count)
+from .trace import (trace, TracedFunction, atomic, attention_flops,
+                    jaxpr_flops)
 from .compiler import (CompilerOptions, CompiledApp, CompileState,
-                       PassManager, PassRecord, cached_jit, CachedFunction,
-                       compile)
+                       PassManager, PassRecord, TracedApp, cached_jit,
+                       CachedFunction, compile)
 
 __all__ = [
     "Graph", "Node", "TensorSpec", "MXU", "VPU", "graph_fingerprint",
@@ -56,4 +58,6 @@ __all__ = [
     "lowering_count",
     "CompilerOptions", "CompiledApp", "CompileState", "PassManager",
     "PassRecord", "cached_jit", "CachedFunction", "compile",
+    "trace", "TracedFunction", "TracedApp", "atomic", "attention_flops",
+    "jaxpr_flops",
 ]

@@ -40,6 +40,7 @@ from .executor import (Engine, ExecutionReport, _shape_key, executable_cache,
                        init_params, make_backend)
 from .graph import Graph, graph_fingerprint
 from .patterns import PATTERN_LIBRARY, Selection, select_subgraphs
+from .trace import TracedFunction, trace as trace_fn
 from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, OpQueue,
                        Pipeline, PipelinedGraph, Stage, fuse_epilogues,
                        materialize_queues, plan_queues, split_reductions)
@@ -393,19 +394,86 @@ class CompiledApp:
                 f"{len(self.pipelined.pipelines)} pipelines)")
 
 
-def compile(graph: Graph, options: CompilerOptions | None = None, *,
+class TracedApp(CompiledApp):
+    """A CompiledApp built by tracing a jax callable (core/trace.py).
+
+    Behaves like the original function: `app(*args)` feeds the positional
+    arrays (plus the captured consts) through the compiled executor and
+    returns outputs in the function's own pytree structure.  Weights live in
+    the traced consts, so `init_params()` is empty and `run()` needs no
+    params dict."""
+
+    def __init__(self, traced: TracedFunction, options: CompilerOptions,
+                 state: CompileState, pass_records: list[PassRecord]):
+        self.traced = traced
+        super().__init__(traced.graph, options, state, pass_records)
+
+    def __call__(self, *args):
+        report = self.run(self.traced.feeds(*args))
+        return self.traced.unflatten_outputs(report.outputs)
+
+    def run(self, feeds: dict[str, jax.Array], params: dict | None = None,
+            ) -> ExecutionReport:
+        full = dict(self.traced.consts)
+        full.update(feeds)
+        return super().run(full, params)
+
+    def init_params(self, key: jax.Array, scale: float = 0.02,
+                    dtype=None) -> dict:
+        return {}  # weights are captured consts, fed automatically
+
+    def __repr__(self):
+        return (f"TracedApp({self.graph.name!r}, mode={self.options.mode!r}, "
+                f"{len(self.graph.nodes)} nodes, "
+                f"{len(self.traced.consts)} consts)")
+
+
+def compile(graph: Graph | Callable, *args,
+            options: CompilerOptions | None = None,
+            example_inputs: tuple | None = None,
             pass_manager: PassManager | None = None,
             **option_overrides) -> CompiledApp:
-    """Compile an operator graph into a CompiledApp.
+    """Compile an operator graph OR any jax callable into a CompiledApp.
 
-    `repro.compile(g)` / `repro.compile(g, CompilerOptions(mode="bsp"))` /
-    `repro.compile(g, mode="vertical")` all work; keyword overrides build a
-    CompilerOptions when none is given."""
+    Graphs: `repro.compile(g)` / `repro.compile(g, mode="vertical")` /
+    `repro.compile(g, CompilerOptions(...))`.
+    Callables: `repro.compile(fn, example_inputs)` (optionally with a
+    CompilerOptions third positional / keyword) traces `fn` through
+    `jax.make_jaxpr` -- tracing is pass 0 of the pipeline -- and returns a
+    TracedApp that is itself callable like `fn`.  `example_inputs` is the
+    tuple of positional example arguments (a single array may be passed
+    bare)."""
+    for a in args:
+        if isinstance(a, CompilerOptions):
+            if options is not None:
+                raise TypeError("options given twice")
+            options = a
+        elif example_inputs is None:
+            example_inputs = a
+        else:
+            raise TypeError(f"unexpected positional argument {a!r}")
     if options is None:
         options = CompilerOptions(**option_overrides)
     elif option_overrides:
         options = replace(options, **option_overrides)
     pm = pass_manager or PassManager()
+    if not isinstance(graph, Graph) and callable(graph):
+        if example_inputs is None:
+            raise TypeError("repro.compile(fn, ...) needs example_inputs")
+        if not isinstance(example_inputs, (tuple, list)):
+            example_inputs = (example_inputs,)
+        t0 = time.perf_counter()
+        traced = trace_fn(graph, *tuple(example_inputs))
+        rec = PassRecord("trace", time.perf_counter() - t0, False,
+                         f"{len(traced.graph.nodes)} nodes, "
+                         f"{len(traced.consts)} consts")
+        state = CompileState(traced.graph)
+        records = [rec] + pm.run(state, options)
+        _ensure_pipelined(state, options)
+        return TracedApp(traced, options, state, records)
+    if example_inputs is not None:
+        raise TypeError("example_inputs is only valid when compiling a "
+                        "callable")
     state = CompileState(graph)
     records = pm.run(state, options)
     _ensure_pipelined(state, options)

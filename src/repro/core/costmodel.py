@@ -203,9 +203,9 @@ def cost_kitsune(g: Graph, pipe: Pipeline, hw: HwSpec,
     if vert.time < t:
         return SubgraphCost("kitsune(temporal-fallback)", vert.time,
                             min(vert.dram_bytes, ext_dram), queue_bytes,
-                            {"fallback": True})
+                            {"fallback": True, "pure_time": t})
     return SubgraphCost("kitsune", t, ext_dram, queue_bytes,
-                        {"allocation": allocation})
+                        {"allocation": allocation, "pure_time": t})
 
 
 # ---------------------------------------------------------------------------

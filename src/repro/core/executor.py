@@ -51,6 +51,8 @@ def init_params(graph: Graph, key: jax.Array, scale: float = 0.02,
     """Materialize weights for linear/norm/gather nodes."""
     params: dict[str, Any] = {}
     for n in graph.topo():
+        if "_eval" in n.attrs:
+            continue  # traced node: weights arrive as captured consts
         key, sub = jax.random.split(key)
         if n.kind == "linear":
             d_in, d_out = n.attrs["d_in"], n.attrs["d_out"]
@@ -67,6 +69,11 @@ def init_params(graph: Graph, key: jax.Array, scale: float = 0.02,
 def _eval_node(n: Node, inputs: list[jax.Array], p: dict | None) -> jax.Array:
     if n.kind in ("input", "const"):
         raise AssertionError("inputs are fed externally")
+    ev = n.attrs.get("_eval")
+    if ev is not None:
+        # traced node (core/trace.py): the closure binds the exact jax
+        # primitive + params, so semantics match the source jaxpr bit-for-bit
+        return ev(*inputs)
     if n.kind == "linear":
         y = inputs[0] @ p["w"]
         if n.attrs.get("bias"):

@@ -49,8 +49,13 @@ _MXU_KINDS = {"linear", "matmul", "attention", "conv"}
 _FREE_KINDS = {"input", "const", "reshape", "output", "queue"}
 
 
+# Dtypes plain numpy cannot size without ml_dtypes: alias to a same-width type.
+_DTYPE_ALIAS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8, "float8_e4m3b11fnuz": np.uint8}
+
+
 def _nbytes(shape: tuple[int, ...], dtype: str) -> int:
-    itemsize = np.dtype(dtype if dtype != "bfloat16" else np.uint16).itemsize
+    itemsize = np.dtype(_DTYPE_ALIAS.get(dtype, dtype)).itemsize
     return int(math.prod(shape)) * itemsize
 
 
@@ -276,10 +281,15 @@ def graph_fingerprint(g: Graph) -> str:
     """Stable content hash of a graph's structure + metadata.
 
     Keys the compiled-artifact cache: two graphs with identical nodes (names,
-    kinds, wiring, shapes, attrs) map to the same executables."""
+    kinds, wiring, shapes, attrs) map to the same executables.  Attr keys
+    starting with "_" are implementation carriers (e.g. the traced-node eval
+    closures from core/trace.py, whose repr embeds object addresses) and are
+    excluded; traced nodes instead expose their semantics through the stable
+    public `prim`/`params` attrs."""
     h = hashlib.sha256()
     for n in g.topo():
+        attrs = sorted((k, v) for k, v in n.attrs.items()
+                       if not k.startswith("_"))
         h.update(repr((n.name, n.kind, tuple(n.inputs), n.out.shape,
-                       n.out.dtype, n.flops, n.weight_bytes,
-                       sorted(n.attrs.items()))).encode())
+                       n.out.dtype, n.flops, n.weight_bytes, attrs)).encode())
     return h.hexdigest()[:16]

@@ -160,6 +160,11 @@ def split_reductions(selection: Selection,
             n = g.nodes.get(m)
             if n is None or n.kind != "reduce" or n.attrs.get("keepdims"):
                 continue
+            if "_eval" in n.attrs:
+                # traced non-sum reduction (max/argmax/multi-axis, from
+                # core/trace.py): the generic fan-in/final rewrite assumes
+                # single-axis sum semantics, so leave it whole
+                continue
             if n.attrs.get("red_size", 0) >= split_reduction_min:
                 partial, final = _split_reduction(g, n, fanin=min(
                     int(math.sqrt(n.attrs["red_size"])), 16))

@@ -50,4 +50,6 @@ def get_model(cfg: ArchConfig) -> Model:
     return Model(lambda key: lm.init_params(cfg, key), fwd, icache, dstep)
 
 
-__all__ = ["Model", "get_model", "lm", "encdec"]
+from . import zoo  # noqa: E402  (needs get_model defined above)
+
+__all__ = ["Model", "get_model", "lm", "encdec", "zoo"]

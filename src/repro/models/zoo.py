@@ -1,0 +1,141 @@
+"""Config-zoo bridge: every `repro.configs` architecture as a traceable
+jax function, so the dataflow compiler's capture front-end
+(`repro.compile(fn, example_inputs)`) turns each config into a workload.
+
+    from repro.models import zoo
+    zf = zoo.build("gemma3-1b", batch=2, seq=16)
+    app = repro.compile(zf.fn, zf.example_inputs, mode="kitsune")
+    np.testing.assert_allclose(app(*zf.example_inputs),
+                               zf.fn(*zf.example_inputs))
+
+The built function closes over initialized params (they become captured
+consts / weight reads in the traced graph) and takes the batch tensors
+positionally.  `phase="grad"` builds the jax.grad-derived training function
+(gradients w.r.t. all params), replacing the synthetic backward graphs of
+benchmarks/apps.py with real autodiff jaxprs.
+
+Attention is registered as an ATOMIC sub-jaxpr (core/trace.py registry): the
+zoo function temporarily routes `models.lm.chunked_attention` through a
+marked pjit during tracing, so the importer emits one MXU "attention" node
+per layer instead of dissolving the online-softmax scan into elementwise
+soup -- exactly the granularity the paper's pattern library expects.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ArchConfig
+from repro.core.trace import atomic, attention_flops
+from . import encdec, lm
+from . import get_model
+
+
+@dataclass(frozen=True)
+class ZooFunction:
+    """A traceable positional-args callable built from an ArchConfig."""
+    name: str
+    fn: Callable                 # fn(*example_inputs) -> outputs
+    example_inputs: tuple
+    cfg: ArchConfig
+    phase: str = "forward"
+
+    def reference(self, *args):
+        """Run the UNTRACED function (differential-test ground truth)."""
+        return self.fn(*(args or self.example_inputs))
+
+
+# Fused attention as a recognizable atomic block (one node per layer).
+_ATOMIC_ATTENTION = atomic(lm.chunked_attention, "attention",
+                           flops=attention_flops,
+                           static_argnames=("causal", "chunk"))
+
+
+@contextlib.contextmanager
+def _atomic_attention():
+    orig = lm.chunked_attention
+    lm.chunked_attention = _ATOMIC_ATTENTION
+    try:
+        yield
+    finally:
+        lm.chunked_attention = orig
+
+
+def names() -> list[str]:
+    return sorted(ARCHS)
+
+
+def build(cfg: ArchConfig | str, *, batch: int = 1, seq: int = 16,
+          reduced: bool = True, seed: int = 0, phase: str = "forward",
+          atomic_attention: bool | None = None) -> ZooFunction:
+    """Build a traceable function + example inputs for one architecture.
+
+    reduced=True uses the config's CPU-sized variant (the differential-test
+    shape).  atomic_attention defaults to on for forward and off for grad
+    (differentiating through the marker pjit splits it into fwd/bwd pieces
+    the registry would no longer recognize)."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    r = cfg.reduced() if reduced else cfg
+    if atomic_attention is None:
+        atomic_attention = phase == "forward"
+    model = get_model(r)
+    params = model.init(jax.random.PRNGKey(seed))
+    k_tok, k_emb = jax.random.split(jax.random.PRNGKey(seed + 1))
+    dtype = jnp.dtype(r.dtype) if r.dtype != "bfloat16" else jnp.bfloat16
+
+    arg_names = ["tokens"]
+    n_txt = seq
+    example: list = []
+    if r.family == "vlm":
+        n_txt = max(seq - r.vision_tokens, 1)
+        arg_names.append("patch_embeds")
+    example.append(jax.random.randint(k_tok, (batch, n_txt), 0, r.vocab))
+    if r.family == "vlm":
+        example.append(jax.random.normal(
+            k_emb, (batch, r.vision_tokens, r.d_model), dtype))
+    if r.family == "encdec":
+        arg_names.append("frame_embeds")
+        example.append(jax.random.normal(k_emb, (batch, seq, r.d_model),
+                                         dtype))
+
+    def assemble(args) -> dict:
+        return dict(zip(arg_names, args))
+
+    def forward_fn(*args):
+        ctx = _atomic_attention() if atomic_attention \
+            else contextlib.nullcontext()
+        with ctx:
+            return model.forward(params, assemble(args))
+
+    if phase == "forward":
+        fn = forward_fn
+    elif phase == "grad":
+        def loss(p, args):
+            logits = model.forward(p, assemble(args)).astype(jnp.float32)
+            tokens = args[0]
+            labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+            lse = jax.nn.logsumexp(logits[:, :labels.shape[1]], axis=-1)
+            ll = jnp.take_along_axis(logits[:, :labels.shape[1]],
+                                     labels[..., None], axis=-1)[..., 0]
+            return jnp.mean(lse - ll)
+
+        def fn(*args):
+            ctx = _atomic_attention() if atomic_attention \
+                else contextlib.nullcontext()
+            with ctx:
+                return jax.grad(loss)(params, args)
+    else:
+        raise ValueError(f"unknown phase {phase!r} (forward|grad)")
+    fn.__name__ = f"zoo.{r.name}.{phase}"
+    return ZooFunction(cfg.name, fn, tuple(example), r, phase)
+
+
+def build_all(arch_names: list[str] | None = None, **kw,
+              ) -> dict[str, ZooFunction]:
+    return {n: build(n, **kw) for n in (arch_names or names())}

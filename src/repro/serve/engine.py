@@ -31,6 +31,12 @@ class ServeConfig:
     batch: int
     greedy: bool = True
     temperature: float = 1.0
+    # None: decode tick is one cached_jit program (production default).
+    # "bsp" | "vertical" | "kitsune": the tick is TRACED through the
+    # compiler's capture front-end (core/trace.py) and served from the
+    # chosen executor backend -- the decode loop goes through the same
+    # dataflow pipeline as every other workload.
+    compile_mode: str | None = None
 
 
 def serve_step(params, state, cfg: ArchConfig, *,
@@ -83,11 +89,22 @@ class ServingEngine:
         # and every later engine with the same config -- reuses the cached
         # executable instead of re-jitting (repro.compile()'s hot-path
         # contract applied to the serving loop).
-        self._step = cached_jit(
-            functools.partial(serve_step, cfg=cfg, kernels=kernels,
-                              sharder=sharder),
-            key=("serve_step", cfg.name, sc.batch, sc.max_len, repr(kernels),
-                 str(getattr(sharder, "mesh", "null"))))
+        step_fn = functools.partial(serve_step, cfg=cfg, kernels=kernels,
+                                    sharder=sharder)
+        if sc.compile_mode is not None:
+            # dataflow-pipeline path: trace the tick into an operator graph
+            # and run it on the selected executor backend.  Repeated ticks
+            # hit the same executable cache (zero relowerings).
+            import repro
+            example_state = {"tokens": self.tokens, "pos": self.pos,
+                             "cache": self.cache}
+            self._step = repro.compile(step_fn, (params, example_state),
+                                       mode=sc.compile_mode)
+        else:
+            self._step = cached_jit(
+                step_fn,
+                key=("serve_step", cfg.name, sc.batch, sc.max_len,
+                     repr(kernels), str(getattr(sharder, "mesh", "null"))))
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, request_id: int, prompt: list[int]):

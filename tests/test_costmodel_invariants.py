@@ -1,0 +1,111 @@
+"""Cost-model invariants (core/costmodel.py) over the challenge apps.
+
+  * kitsune never moves MORE DRAM bytes than bulk-synchronous execution
+    (dataflow only removes intermediate round trips, it cannot add them),
+  * the temporal-fallback branch (paper SS3: "preserves the benefits of
+    vertical fusion") is never slower than the pure-kitsune estimate it
+    replaced,
+  * HwSpec.scaled sensitivity variants (paper SS6's 2x compute / 2x on-chip
+    BW study) move estimated times in the right direction.
+"""
+import pytest
+
+import repro
+from repro import CompilerOptions
+from repro.core import cost_kitsune, cost_vertical, v5e_mesh
+from repro.core.costmodel import A100
+
+from benchmarks.apps import APPS, synthesize_backward
+
+HW = v5e_mesh(8)
+
+
+def _graphs():
+    for name, make in APPS.items():
+        yield name, make()
+        if name != "llama_tok":
+            yield name + "_train", synthesize_backward(make())
+
+
+GRAPHS = dict(_graphs())
+
+
+@pytest.fixture(scope="module")
+def apps_compiled():
+    return {name: repro.compile(g, CompilerOptions(mode="kitsune", hw=HW))
+            for name, g in GRAPHS.items()}
+
+
+class TestDramMonotonicity:
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_kitsune_dram_not_above_bsp(self, name, apps_compiled):
+        app = apps_compiled[name]
+        bsp = app.estimate(HW, "bsp")
+        kit = app.estimate(HW, "kitsune")
+        assert kit.dram_bytes <= bsp.dram_bytes * (1 + 1e-9), name
+
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_vertical_dram_not_above_bsp(self, name, apps_compiled):
+        app = apps_compiled[name]
+        bsp = app.estimate(HW, "bsp")
+        vert = app.estimate(HW, "vertical")
+        assert vert.dram_bytes <= bsp.dram_bytes * (1 + 1e-9), name
+
+
+class TestTemporalFallback:
+    # the low-onchip-bandwidth variant starves every queue, so spatial
+    # pipelining loses to temporal fusion and the fallback must fire
+    @pytest.mark.parametrize("hw", [HW, A100, v5e_mesh(1),
+                                    A100.scaled(onchip=0.05)],
+                             ids=lambda h: h.name)
+    def test_fallback_never_slower_than_pure_kitsune(self, hw, apps_compiled):
+        """cost_kitsune returns min(spatial, temporal): whenever the
+        temporal-fallback branch fires, its time must beat the pure-kitsune
+        estimate recorded in detail['pure_time']."""
+        fired = 0
+        for name, app in apps_compiled.items():
+            g = app.pipelined.graph
+            for pipe in app.pipelined.pipelines:
+                c = cost_kitsune(g, pipe, hw)
+                assert "pure_time" in c.detail, (name, pipe.name)
+                assert c.time <= c.detail["pure_time"] * (1 + 1e-9), \
+                    (name, pipe.name)
+                if c.detail.get("fallback"):
+                    fired += 1
+                    members = [o.name for s in pipe.stages for o in s.ops]
+                    vert = cost_vertical(g, members, hw)
+                    assert c.time == pytest.approx(vert.time), \
+                        (name, pipe.name)
+        # the suite must actually exercise the branch somewhere
+        if hw.onchip_bw < A100.onchip_bw / 2:
+            assert fired > 0
+
+
+class TestScaledSensitivity:
+    @pytest.mark.parametrize("name", ["nerf", "llama_ctx", "dlrm"])
+    @pytest.mark.parametrize("mode", ["bsp", "vertical", "kitsune"])
+    def test_directionality(self, name, mode, apps_compiled):
+        app = apps_compiled[name]
+        base = app.estimate(HW, mode).time
+        # more compute / faster memories can only help (or be neutral)
+        assert app.estimate(HW.scaled(compute=2), mode).time \
+            <= base * (1 + 1e-9)
+        assert app.estimate(HW.scaled(onchip=2), mode).time \
+            <= base * (1 + 1e-9)
+        assert app.estimate(HW.scaled(dram=2), mode).time \
+            <= base * (1 + 1e-9)
+        # and slower ones can only hurt (or be neutral)
+        assert app.estimate(HW.scaled(compute=0.5), mode).time \
+            >= base * (1 - 1e-9)
+        assert app.estimate(HW.scaled(dram=0.5), mode).time \
+            >= base * (1 - 1e-9)
+
+    def test_scaled_fields(self):
+        s = HW.scaled(compute=2, onchip=3, dram=0.5)
+        assert s.matrix_flops == HW.matrix_flops * 2
+        assert s.vector_flops == HW.vector_flops * 2
+        assert s.onchip_bw == HW.onchip_bw * 3
+        assert s.dram_bw == HW.dram_bw * 0.5
+        # capacity and unit count are NOT scaled by bandwidth knobs
+        assert s.onchip_capacity == HW.onchip_capacity
+        assert s.n_units == HW.n_units

@@ -1,0 +1,281 @@
+"""Tests for the jaxpr->Graph capture front-end (core/trace.py).
+
+Golden invariants:
+  * DIFFERENTIAL: for every config-zoo architecture (tiny dims), executing
+    the traced Graph under bsp / vertical / kitsune matches the raw jax
+    function to fp tolerance, and repeat runs add ZERO new lowerings,
+  * structural: traced graphs satisfy the Graph invariants (topo respects
+    edges, cached consumers index == fresh rescan, node specs match the
+    jaxpr avals) -- property-tested over generated functions,
+  * the atomic sub-jaxpr registry keeps attention one MXU node,
+  * scan unrolling and the opaque fallback are numerically identical,
+  * jax.grad-derived training jaxprs trace and match autodiff,
+  * the serving engine's compile_mode ticks through the dataflow pipeline.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.core.executor import _eval_node, lowering_count
+from repro.core.trace import trace
+from repro.models import zoo
+
+MODES = ("bsp", "vertical", "kitsune")
+ZOO_NAMES = zoo.names()
+assert len(ZOO_NAMES) >= 8, "differential suite needs >=8 architectures"
+
+_f32 = functools.partial(jax.tree_util.tree_map,
+                         lambda a: np.asarray(a, np.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _zoo_case(name, phase="forward"):
+    zf = zoo.build(name, batch=1, seq=8, phase=phase)
+    want = _f32(zf.fn(*zf.example_inputs))
+    return zf, want
+
+
+def _assert_close(got, want, **kw):
+    jax.tree_util.tree_map(
+        lambda g, w: np.testing.assert_allclose(g, w, **kw), got, want)
+
+
+# --------------------------------------------------------------------------
+# differential suite: traced zoo == raw jax function, all three modes
+# --------------------------------------------------------------------------
+
+class TestZooDifferential:
+    @pytest.mark.parametrize("name", ZOO_NAMES)
+    def test_three_modes_match_raw_fn_and_cache(self, name):
+        zf, want = _zoo_case(name)
+        for mode in MODES:
+            app = repro.compile(zf.fn, zf.example_inputs, mode=mode)
+            got = _f32(app(*zf.example_inputs))
+            _assert_close(got, want, rtol=2e-4, atol=2e-4,
+                          err_msg=f"{name}: traced {mode} != raw fn")
+            before = lowering_count()
+            rep = app.run(app.traced.feeds(*zf.example_inputs))
+            assert lowering_count() == before, \
+                f"{name}/{mode}: repeat run re-lowered"
+            assert rep.cache_misses == 0
+
+    @pytest.mark.parametrize("name", ["gemma3-1b", "hymba-1.5b"])
+    def test_retrace_reuses_executables(self, name):
+        """A FRESH trace+compile of the same function hits the same cache
+        entries (stable fingerprint from prim/params, not closure ids)."""
+        zf, _ = _zoo_case(name)
+        app1 = repro.compile(zf.fn, zf.example_inputs, mode="kitsune")
+        app1(*zf.example_inputs)
+        before = lowering_count()
+        app2 = repro.compile(zf.fn, zf.example_inputs, mode="kitsune")
+        assert app2.fingerprint == app1.fingerprint
+        app2(*zf.example_inputs)
+        assert lowering_count() == before, "identical retrace re-lowered"
+
+    def test_grad_trace_matches_autodiff(self):
+        """jax.grad-derived training jaxpr (reverse scan, scatter-adds)
+        traces and matches raw autodiff -- the real replacement for the
+        synthetic synthesize_backward graphs."""
+        zf, want = _zoo_case("gemma3-1b", phase="grad")
+        app = repro.compile(zf.fn, zf.example_inputs, mode="kitsune")
+        got = _f32(app(*zf.example_inputs))
+        _assert_close(got, want, rtol=5e-4, atol=5e-4)
+
+
+# --------------------------------------------------------------------------
+# structural invariants (hypothesis over generated functions)
+# --------------------------------------------------------------------------
+
+_ACTS = {"tanh": jnp.tanh, "gelu": jax.nn.gelu,
+         "relu": lambda x: jnp.maximum(x, 0.0)}
+
+
+def _gen_fn(depth, width, act, use_reduce, use_scan):
+    keys = jax.random.split(jax.random.PRNGKey(depth * 7 + width), depth + 1)
+    dims = [6] + [width] * depth
+    ws = [jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) * 0.3
+          for i, k in enumerate(keys[:depth])]
+    w_scan = jax.random.normal(keys[-1], (width, width), jnp.float32) * 0.3
+
+    def fn(x):
+        h = x
+        for w in ws:
+            h = _ACTS[act](h @ w)
+        if use_scan:
+            def body(c, _):
+                c = jnp.tanh(c @ w_scan)
+                return c, c.sum()
+            h, sums = jax.lax.scan(body, h, None, length=3)
+            h = h + sums.mean()
+        if use_reduce:
+            return h.sum(axis=0), h
+        return h
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6), jnp.float32)
+    return fn, x
+
+
+class TestTracedGraphInvariants:
+    @settings(deadline=None, max_examples=12)
+    @given(depth=st.integers(min_value=1, max_value=3),
+           width=st.sampled_from([4, 8, 16]),
+           act=st.sampled_from(sorted(_ACTS)),
+           use_reduce=st.booleans(),
+           use_scan=st.booleans())
+    def test_invariants(self, depth, width, act, use_reduce, use_scan):
+        fn, x = _gen_fn(depth, width, act, use_reduce, use_scan)
+        tf = trace(fn, x)
+        g = tf.graph
+        # 1. topo() respects edges: producers strictly precede consumers
+        pos = {n.name: i for i, n in enumerate(g.topo())}
+        for n in g.topo():
+            for i in n.inputs:
+                assert pos[i] < pos[n.name], (i, n.name)
+        # 2. cached consumers index == fresh O(N) rescan
+        fresh: dict[str, list[str]] = {k: [] for k in g.nodes}
+        for n in g.topo():
+            for i in dict.fromkeys(n.inputs):
+                fresh[i].append(n.name)
+        for k in g.nodes:
+            assert [c.name for c in g.consumers(k)] == fresh[k], k
+        # 3. every non-input node's shape/dtype matches the jaxpr avals
+        #    (checked by eager evaluation against the recorded TensorSpec)
+        vals = dict(tf.feeds(x))
+        for n in g.topo():
+            if n.kind in ("input", "const"):
+                continue
+            v = _eval_node(n, [vals[i] for i in n.inputs], None)
+            vals[n.name] = v
+            if isinstance(v, tuple):
+                assert n.attrs.get("n_outs") == len(v), n.name
+                continue
+            assert tuple(v.shape) == n.out.shape, n.name
+            assert str(v.dtype) == n.out.dtype, n.name
+        # and the whole eager walk reproduces the function
+        got = tf.unflatten_outputs(
+            {nm: vals[nm] for nm in tf.out_names})
+        _assert_close(_f32(got), _f32(fn(x)), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# importer features
+# --------------------------------------------------------------------------
+
+class TestImporter:
+    def test_atomic_attention_single_mxu_node(self):
+        from repro.core.graph import MXU
+        zf, _ = _zoo_case("gemma3-1b")
+        tf = trace(zf.fn, *zf.example_inputs)
+        attn = [n for n in tf.graph.topo() if n.kind == "attention"]
+        assert len(attn) == 2  # one per unrolled layer
+        for n in attn:
+            assert n.resource == MXU
+            assert n.flops > 0
+            assert "repro.atomic" in n.attrs.get("atomic", "")
+
+    def test_scan_unrolled_vs_opaque_identical(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (8, 8)) * 0.3
+
+        def fn(x):
+            def body(c, t):
+                return jnp.tanh(c @ w) + t, c.mean()
+            c, ms = jax.lax.scan(body, x, jnp.arange(4.0))
+            return c, ms
+
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 8))
+        unrolled = trace(fn, x)
+        opaque = trace(fn, x, max_unroll_eqns=1)
+        assert not any(n.attrs.get("prim") == "scan"
+                       for n in unrolled.graph.topo())
+        assert any(n.attrs.get("prim") == "scan"
+                   for n in opaque.graph.topo())
+        want = _f32(fn(x))
+        got_u = _f32(repro.compile(fn, (x,), mode="vertical")(x))
+        _assert_close(got_u, want, rtol=1e-5, atol=1e-5)
+        # opaque path executes through the eval closure too
+        vals = dict(opaque.feeds(x))
+        for n in opaque.graph.topo():
+            if n.kind in ("input", "const"):
+                continue
+            vals[n.name] = _eval_node(n, [vals[i] for i in n.inputs], None)
+        got_o = _f32(opaque.unflatten_outputs(
+            {nm: vals[nm] for nm in opaque.out_names}))
+        _assert_close(got_o, want, rtol=1e-5, atol=1e-5)
+
+    def test_multi_output_primitive(self):
+        def fn(x):
+            v, i = jax.lax.top_k(x, 2)
+            return v * 2.0, i
+
+        x = jnp.asarray([[3.0, 1.0, 2.0], [0.0, 5.0, 4.0]])
+        app = repro.compile(fn, (x,), mode="bsp")
+        v, i = app(x)
+        wv, wi = fn(x)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(wi))
+
+    def test_captured_consts_are_weights(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (4, 4))
+
+        def fn(x):
+            return x @ w
+
+        x = jnp.ones((2, 4))
+        app = repro.compile(fn, (x,), mode="bsp")
+        consts = [n for n in app.graph.topo() if n.kind == "const"]
+        assert any(c.out.shape == (4, 4) for c in consts)
+        assert app.init_params(jax.random.PRNGKey(0)) == {}
+        np.testing.assert_allclose(np.asarray(app(x)), np.asarray(fn(x)),
+                                   rtol=1e-6)
+
+    def test_traced_reduce_still_splits(self):
+        """A plain fp sum imports closure-free, so the split-reduction pass
+        (Algorithm 1) can rewrite it; non-sum reductions stay whole."""
+        def fn(x):
+            return jnp.tanh(x * x).sum(axis=0), x.max(axis=0)
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+        app = repro.compile(fn, (x,), mode="kitsune")
+        kinds = [n.kind for n in app.pipelined.graph.topo()]
+        assert "reduce_partial" in kinds  # the sum was split
+        prims = [n.attrs.get("prim") for n in app.pipelined.graph.topo()]
+        assert "reduce_max" in prims      # the max was not
+        _assert_close(_f32(app(x)), _f32(fn(x)), rtol=1e-5, atol=1e-5)
+
+    def test_bad_calls_rejected(self):
+        with pytest.raises(TypeError):
+            repro.compile(lambda x: x)  # no example_inputs
+        app = repro.compile(lambda x: x * 2, (jnp.ones(3),))
+        with pytest.raises(TypeError):
+            app(jnp.ones(3), jnp.ones(3))  # arity mismatch
+
+
+# --------------------------------------------------------------------------
+# serving through the dataflow pipeline
+# --------------------------------------------------------------------------
+
+class TestServeCompileMode:
+    def test_traced_engine_matches_default(self):
+        from repro.configs import get_config
+        from repro.models import get_model
+        from repro.serve.engine import ServeConfig, ServingEngine
+        r = get_config("gemma3-1b").reduced()
+        params = get_model(r).init(jax.random.PRNGKey(0))
+        prompts = {1: [5, 6, 7], 2: [9, 8]}
+
+        def run(mode):
+            eng = ServingEngine(r, params,
+                                ServeConfig(max_len=12, batch=2,
+                                            compile_mode=mode))
+            for rid, p in prompts.items():
+                eng.submit(rid, list(p))
+            return eng.run_until_done(max_ticks=30)
+
+        base = run(None)
+        traced = run("kitsune")
+        assert base == traced and set(base) == set(prompts)
