@@ -229,3 +229,31 @@ APPS = {
     "llama_ctx": llama3_8b,
     "llama_tok": lambda: llama3_8b(decode=True),
 }
+
+
+def tiny_instances() -> dict:
+    """CPU-sized instances of the five challenge apps with matching feeds:
+    the NUMERICALLY EXECUTABLE shapes used by the measured wall-clock /
+    traffic benches (bench_e2e.measured_e2e) and the differential tests."""
+    import jax
+    import jax.numpy as jnp
+    k = jax.random.PRNGKey
+    return {
+        "dlrm": (dlrm(batch=16, emb_rows=64), {
+            "dense_x": jax.random.normal(k(1), (16, 13), jnp.float32),
+            "sparse_ids": jax.random.randint(k(2), (16, 8), 0, 64)}),
+        "mgn": (meshgraphnets(batch=16, steps=1), {
+            "nodes": jax.random.normal(k(1), (16, 128), jnp.float32),
+            "edges": jax.random.normal(k(2), (48, 128), jnp.float32),
+            "edge_idx": jax.random.randint(k(3), (48,), 0, 16)}),
+        "nerf": (nerf(rays=4, samples=4), {
+            "pts": jax.random.normal(k(1), (16, 60), jnp.float32),
+            "view": jax.random.normal(k(2), (16, 24), jnp.float32)}),
+        "graphcast": (graphcast(nodes=16, hidden=16, steps=1), {
+            "x": jax.random.normal(k(1), (16, 256), jnp.float32),
+            "mesh_idx": jax.random.randint(k(2), (16,), 0, 16)}),
+        # hkv == hq: the GQA head expansion is modeled, not materialized
+        "llama": (llama3_8b(seq=4, batch=2, n_layers=1, d=16, ff=32,
+                            hq=2, hkv=2, hd=8, vocab=32), {
+            "ids": jax.random.randint(k(1), (2, 4), 0, 32)}),
+    }

@@ -1,0 +1,106 @@
+"""Per-call dispatch-overhead microbench for `CompiledApp.run()`.
+
+Compute is made negligible (a chain of tiny elementwise programs), so the
+measured us/call IS the Python dispatch overhead of the executor hot loop.
+Two paths over the SAME cached executables:
+
+  * plan   -- Engine.run: the precompiled ExecutionPlan (slots resolved to
+    integer indices once, shape key built once per call, executables
+    prebound, flat intermediate buffer, dead-argument donation).
+  * legacy -- Engine.run_legacy: the historical dict-driven loop that
+    rebuilt per-program shape keys + cache lookups + feed dicts per call.
+
+A third timing, `floor`, replays the SAME prebound executables in a bare
+Python loop with no executor at all: the irreducible cost of launching
+n_ops XLA programs from Python.  Dispatch OVERHEAD is path_time - floor,
+and `overhead_speedup = legacy_overhead / plan_overhead` is the tracked
+per-PR number (BENCH_smoke.json via `benchmarks/run.py --smoke`); the
+acceptance bar for the ExecutionPlan work was >= 5x.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro
+
+
+def chain_graph(n_ops: int = 24, dim: int = 16) -> "repro.Graph":
+    """A chain of n_ops tiny VPU ops: under bsp, one program per op -- the
+    worst-case dispatch:compute ratio a real model's BSP tail exhibits."""
+    g = repro.Graph("dispatch_chain")
+    g.input("x", (dim, dim), "float32")
+    cur = "x"
+    for i in range(n_ops):
+        cur = g.elementwise(f"e{i}", [cur], "relu").name
+    g.output("y", cur)
+    return g
+
+
+def _best_of(fn, repeats: int = 3) -> float:
+    """Best-of-N timing: the minimum is the least noise-contaminated
+    estimate of a deterministic loop's cost."""
+    return min(fn() for _ in range(repeats))
+
+
+def _time_per_call(run, feeds, params, iters: int) -> float:
+    run(feeds, params)  # warm: plan built / cache populated
+
+    def once():
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            rep = run(feeds, params)
+        jax.block_until_ready(rep.outputs)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    return _best_of(once)
+
+
+def _floor_per_call(eng, x, iters: int) -> float:
+    """Bare loop over the plan's prebound executables: the cost of the XLA
+    launches alone (the part NO executor design can remove)."""
+    plan = next(iter(eng._plans.values()))
+    calls = [st.call for st in plan.steps if hasattr(st, "call")]
+
+    def once():
+        t0 = time.perf_counter()
+        v = x
+        for _ in range(iters):
+            v = x
+            for call in calls:
+                v = call(v)[0]
+        jax.block_until_ready(v)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    return _best_of(once)
+
+
+def main(csv: bool = True, iters: int = 300, n_ops: int = 24,
+         dim: int = 16) -> dict:
+    g = chain_graph(n_ops, dim)
+    app = repro.compile(g, mode="bsp")
+    feeds = {"x": jnp.ones((dim, dim), jnp.float32)}
+    params: dict = {}
+    eng = app._engine
+    legacy_us = _time_per_call(eng.run_legacy, feeds, params, iters)
+    plan_us = _time_per_call(eng.run, feeds, params, iters)
+    floor_us = _floor_per_call(eng, feeds["x"], iters)
+    # clamp at 1us: below that the plan overhead is timer/scheduler noise
+    plan_over = max(plan_us - floor_us, 1.0)
+    legacy_over = max(legacy_us - floor_us, 1.0)
+    speedup = legacy_over / plan_over
+    if csv:
+        print(f"dispatch_plan,{plan_us:.1f},per_call_us;{n_ops}_programs")
+        print(f"dispatch_legacy,{legacy_us:.1f},per_call_us;{n_ops}_programs")
+        print(f"dispatch_floor,{floor_us:.1f},bare_executable_loop_us")
+        print(f"dispatch_overhead,0,plan={plan_over:.1f}us"
+              f";legacy={legacy_over:.1f}us;speedup={speedup:.1f}x")
+    return {"plan_us": plan_us, "legacy_us": legacy_us, "floor_us": floor_us,
+            "plan_overhead_us": plan_over, "legacy_overhead_us": legacy_over,
+            "overhead_speedup": speedup, "n_programs": n_ops, "iters": iters}
+
+
+if __name__ == "__main__":
+    main()

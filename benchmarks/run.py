@@ -13,34 +13,28 @@ import traceback
 
 
 def smoke(out_path: str = "BENCH_smoke.json") -> dict:
-    import repro
-    from repro import CompilerOptions
-    from repro.models import zoo
-    from . import bench_coverage, bench_e2e
+    from . import bench_coverage, bench_dispatch, bench_e2e
     zoo_names = ["gemma3-1b", "qwen1.5-32b"]
     t0 = time.time()
     gm_i, gm_t = bench_e2e.main(csv=False)
     apps_cov = bench_coverage.main(csv=False)
-    # one trace+compile per arch; e2e ratios and coverage from the same app
+    # one trace+compile per arch (bench_e2e.zoo_app memo); the e2e ratios
+    # and the coverage axis both read the same compiled artifact
     hw = bench_e2e.HW
-    zoo_e2e, zoo_cov = {}, {}
+    zoo_e2e = bench_e2e.zoo_e2e(zoo_names, csv=False)
+    zoo_cov = {}
     for name in zoo_names:
-        zf = zoo.build(name, batch=1, seq=16)
-        app = repro.compile(zf.fn, zf.example_inputs,
-                            CompilerOptions(mode="kitsune", hw=hw))
+        app, _, _ = bench_e2e.zoo_app(name)
         bsp = app.estimate(hw, "bsp")
         kit = app.estimate(hw, "kitsune")
         grouped, total = app.selection.coverage()
-        zoo_e2e[name] = {
-            "vertical": bsp.time / app.estimate(hw, "vertical").time,
-            "kitsune": bsp.time / kit.time,
-            "coverage": grouped / max(total, 1),
-            "nodes": len(app.graph.nodes)}
         zoo_cov[name] = {
             "ops": total, "grouped": grouped,
             "coverage": grouped / max(total, 1),
             "traffic_red_kitsune":
                 1 - kit.dram_bytes / max(bsp.dram_bytes, 1)}
+    dispatch = bench_dispatch.main(csv=False, iters=200)
+    apps_measured = bench_e2e.measured_e2e(csv=False, iters=5)
     results = {
         "schema": 1,
         "kind": "smoke",
@@ -49,14 +43,17 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "e2e_geomean": {"inference": gm_i, "training": gm_t},
         "apps_coverage": {
             name: r["inference"] for name, r in apps_cov.items()},
+        "apps_measured": apps_measured,
         "zoo_e2e": zoo_e2e,
         "zoo_coverage": zoo_cov,
+        "dispatch_overhead": dispatch,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"# smoke results -> {out_path} "
           f"(e2e geomean inf={gm_i:.2f} train={gm_t:.2f}, "
-          f"zoo={list(zoo_e2e)})")
+          f"zoo={list(zoo_e2e)}, "
+          f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x)")
     return results
 
 
@@ -71,9 +68,9 @@ def main() -> None:
     if ns.smoke:
         smoke(ns.out)
         return
-    from . import (bench_coverage, bench_e2e, bench_kernels, bench_queue,
-                   bench_roofline, bench_sensitivity, bench_subgraph,
-                   bench_utilization)
+    from . import (bench_coverage, bench_dispatch, bench_e2e, bench_kernels,
+                   bench_queue, bench_roofline, bench_sensitivity,
+                   bench_subgraph, bench_utilization)
     sections = [
         ("Fig5_queue_bandwidth", bench_queue.main),
         ("Table2_coverage_traffic", bench_coverage.main),
@@ -82,6 +79,7 @@ def main() -> None:
         ("Fig10_sensitivity", bench_sensitivity.main),
         ("Fig3_13_utilization", bench_utilization.main),
         ("kernel_benchmarks", bench_kernels.main),
+        ("dispatch_overhead", bench_dispatch.main),
         ("roofline_table", bench_roofline.main),
     ]
     failed = []

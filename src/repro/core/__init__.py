@@ -7,7 +7,8 @@ The paper's SS5 flow is exposed as ONE front door (compiler.py):
 
 with the stages runnable as named passes through PassManager:
 
-    select -> split_reduction -> create_queues -> epilogue_fuse -> balance
+    select -> split_reduction -> create_queues -> epilogue_fuse ->
+    lower_kernels -> balance
 
 The historical free functions (select_subgraphs, design_pipeline, balance,
 GraphExecutor) remain exported for direct pass-level use and tests; the
@@ -31,9 +32,11 @@ from .queue import (
 )
 from .executor import (GraphExecutor, ExecutorBackend, BSPBackend,
                        VerticalBackend, KitsuneBackend, make_backend,
-                       ExecutionReport, init_params, compare_traffic,
-                       executable_cache, clear_executable_cache,
-                       lowering_count)
+                       ExecutionReport, ExecutionPlan, init_params,
+                       compare_traffic, executable_cache,
+                       clear_executable_cache, lowering_count)
+from .lower import (KernelMatch, LoweringPlan, PipelineLowering,
+                    lower_pipelines)
 from .trace import (trace, TracedFunction, atomic, attention_flops,
                     jaxpr_flops)
 from .compiler import (CompilerOptions, CompiledApp, CompileState,
@@ -53,9 +56,10 @@ __all__ = [
     "queue_bandwidth", "VMEM_QUEUE", "ICI_QUEUE", "L2_QUEUE_A100",
     "spatial_pipeline", "make_spatial_pipeline", "ring_push",
     "GraphExecutor", "ExecutorBackend", "BSPBackend", "VerticalBackend",
-    "KitsuneBackend", "make_backend", "ExecutionReport", "init_params",
-    "compare_traffic", "executable_cache", "clear_executable_cache",
-    "lowering_count",
+    "KitsuneBackend", "make_backend", "ExecutionReport", "ExecutionPlan",
+    "init_params", "compare_traffic", "executable_cache",
+    "clear_executable_cache", "lowering_count",
+    "KernelMatch", "LoweringPlan", "PipelineLowering", "lower_pipelines",
     "CompilerOptions", "CompiledApp", "CompileState", "PassManager",
     "PassRecord", "cached_jit", "CachedFunction", "compile",
     "trace", "TracedFunction", "TracedApp", "atomic", "attention_flops",

@@ -14,9 +14,13 @@ Pieces:
     tile bytes, split-reduction threshold, pattern subset, balancing).
   * PassManager -- runs the stages as NAMED passes
     (`select -> split_reduction -> create_queues -> epilogue_fuse ->
-    balance`) with per-pass wall-clock timing, an IR dump hook, support for
-    reordering, and per-pass disabling (each disabled pass degrades to its
-    identity/fallback form instead of crashing downstream passes).
+    lower_kernels -> balance`) with per-pass wall-clock timing, an IR dump
+    hook, support for reordering, and per-pass disabling (each disabled pass
+    degrades to its identity/fallback form instead of crashing downstream
+    passes).  `lower_kernels` (core/lower.py) pattern-matches the pipelined
+    sf-node stages onto the real Pallas dataflow kernels (fused MLP /
+    SwiGLU, flash attention/decode, queue_reduce), with per-op fallback
+    reasons surfaced by `CompiledApp.describe()`.
   * CompiledApp -- the compiled artifact: selection + pipelined IR + balance
     results + an executor Engine whose XLA executables live in the
     process-wide cache keyed by (graph fingerprint, feed shapes, options),
@@ -39,6 +43,7 @@ from .costmodel import GraphCost, HwSpec, evaluate, v5e_mesh
 from .executor import (Engine, ExecutionReport, _shape_key, executable_cache,
                        init_params, make_backend)
 from .graph import Graph, graph_fingerprint
+from .lower import LoweringPlan, lower_pipelines
 from .patterns import PATTERN_LIBRARY, Selection, select_subgraphs
 from .trace import TracedFunction, trace as trace_fn
 from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, OpQueue,
@@ -47,7 +52,7 @@ from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, OpQueue,
 
 MODES = ("bsp", "vertical", "kitsune")
 PASS_NAMES = ("select", "split_reduction", "create_queues", "epilogue_fuse",
-              "balance")
+              "lower_kernels", "balance")
 
 
 @dataclass(frozen=True)
@@ -123,6 +128,7 @@ class CompileState:
     stages_of: dict[str, tuple[list[Stage], dict[str, Stage]]] = \
         field(default_factory=dict)
     pipelined: PipelinedGraph | None = None
+    lowering: LoweringPlan | None = None            # lower_kernels artifact
     balance_results: dict[str, BalanceResult] = field(default_factory=dict)
 
 
@@ -159,6 +165,7 @@ def _invalidate_derived(state: CompileState) -> None:
     state.op_queues = {}
     state.stages_of = {}
     state.pipelined = None
+    state.lowering = None
 
 
 def _pass_select(state: CompileState, opts: CompilerOptions) -> str:
@@ -221,6 +228,33 @@ def _skip_epilogue_fuse(state: CompileState, opts: CompilerOptions) -> str:
     return _pass_epilogue_fuse(state, opts, enable=False) + " (unfused)"
 
 
+def _pipelined_members(pg: PipelinedGraph) -> dict[str, list[str]]:
+    """Executable member list per pipeline: stage ops re-sorted to topo order
+    (epilogue fusion can hoist an op into its producer's stage past
+    siblings).  This is the exact member order the kitsune backend runs."""
+    order = {name: i for i, name in enumerate(pg.graph.nodes)}
+    return {p.name: sorted((o.name for s in p.stages for o in s.ops),
+                           key=order.__getitem__)
+            for p in pg.pipelines}
+
+
+def _pass_lower_kernels(state: CompileState, opts: CompilerOptions) -> str:
+    pg = _ensure_pipelined(state, opts)
+    if opts.mode != "kitsune":
+        # bsp/vertical never execute sf-node programs, so matching would be
+        # wasted work and describe() would claim kernels that never run
+        state.lowering = None
+        return f"skipped: kernels only execute in kitsune mode ({opts.mode})"
+    state.lowering = lower_pipelines(pg.graph, _pipelined_members(pg))
+    return state.lowering.summary()
+
+
+def _skip_lower_kernels(state: CompileState, opts: CompilerOptions) -> str:
+    _ensure_pipelined(state, opts)
+    state.lowering = None
+    return "kernel lowering disabled: every stage runs the jnp path"
+
+
 def _pass_balance(state: CompileState, opts: CompilerOptions) -> str:
     pg = _ensure_pipelined(state, opts)
     hw = opts.resolved_hw()
@@ -271,6 +305,7 @@ _PASSES: dict[str, tuple[Callable, Callable]] = {
     "split_reduction": (_pass_split_reduction, _skip_split_reduction),
     "create_queues": (_pass_create_queues, _skip_create_queues),
     "epilogue_fuse": (_pass_epilogue_fuse, _skip_epilogue_fuse),
+    "lower_kernels": (_pass_lower_kernels, _skip_lower_kernels),
     "balance": (_pass_balance, _skip_balance),
 }
 
@@ -322,23 +357,25 @@ class CompiledApp:
         self.pass_records = pass_records
         self.selection = state.selection
         self.pipelined = state.pipelined
+        self.lowering = state.lowering
         self.balance_results = state.balance_results
         self.fingerprint = graph_fingerprint(graph)
         if options.mode == "kitsune":
             # execute the POST-pass graph: reductions split, stage structure
-            # fixed; sf programs follow the pipelined member lists.  Stage
-            # flattening can reorder ops (epilogue fusion hoists an op into
-            # its producer's stage past siblings), so re-sort to topo order.
+            # fixed; sf programs follow the pipelined member lists (see
+            # _pipelined_members), with lower_kernels matches replacing
+            # member chains by real Pallas kernel calls.
             exec_graph = state.pipelined.graph
-            order = {name: i for i, name in enumerate(exec_graph.nodes)}
-            sf_members = [
-                (p.name, sorted((o.name for s in p.stages for o in s.ops),
-                                key=order.__getitem__))
-                for p in state.pipelined.pipelines]
+            members = _pipelined_members(state.pipelined)
+            sf_members = [(p.name, members[p.name])
+                          for p in state.pipelined.pipelines]
+            lowering = state.lowering
         else:
             exec_graph = graph
             sf_members = []
-        backend = make_backend(options.mode, exec_graph, sf_members)
+            lowering = None
+        backend = make_backend(options.mode, exec_graph, sf_members,
+                               lowering)
         self._engine = Engine(backend,
                               (self.fingerprint, options.cache_key()))
 
@@ -377,16 +414,33 @@ class CompiledApp:
         for p in self.pipelined.pipelines:
             lines.append(f"  pipeline {p.name}: "
                          f"{len(p.stages)} stages, {len(p.queues)} queues")
+            low = (self.lowering.pipelines.get(p.name)
+                   if self.lowering is not None else None)
+            lowered_of = {}
+            if low is not None:
+                lowered_of = {op: m for m in low.matches for op in m.ops}
             for s in p.stages:
                 alloc = self.balance_results.get(p.name)
                 units = (alloc.allocation.get(s.name) if alloc else None)
                 ustr = f" units={units}" if units is not None else ""
+                kstr = ""
+                kernels = sorted({lowered_of[o.name].label() for o in s.ops
+                                  if o.name in lowered_of})
+                if kernels:
+                    kstr = f" kernel={'|'.join(kernels)}"
                 lines.append(f"    stage {s.name} [{s.resource}]"
-                             f" ops={[o.name for o in s.ops]}{ustr}")
+                             f" ops={[o.name for o in s.ops]}{ustr}{kstr}")
             for q in p.queues:
                 lines.append(f"    queue {q.name}: {q.producer} -> "
                              f"{q.consumers} ({q.payload_bytes // 1024}KB"
                              f" x{q.depth})")
+            if low is not None:
+                for m in low.matches:
+                    tag = "" if m.executable else " (plan-only)"
+                    lines.append(f"    lowered {m.label()}{tag}: "
+                                 f"{'+'.join(m.ops)} -> {m.out}")
+                for op, why in low.fallbacks.items():
+                    lines.append(f"    fallback {op}: {why}")
         return "\n".join(lines)
 
     def __repr__(self):

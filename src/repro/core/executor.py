@@ -10,6 +10,10 @@ Three backends behind one ABC (the vLLM ExecutorBase idiom):
     capacity).
   * KitsuneBackend  -- lowers every sf-node as ONE fused program
     (spatial-dataflow mode); ops outside sf-nodes fall back to per-op BSP.
+    With a `lower_kernels` plan (core/lower.py) the fused programs call the
+    REAL Pallas dataflow kernels for matched stage chains (fused MLP /
+    SwiGLU, flash attention/decode, queue_reduce) instead of replaying the
+    member ops' jnp closures.
 
 Numerical equivalence between the three modes is a test invariant; the
 difference is *where the intermediates live*, which we measure from XLA's
@@ -21,11 +25,21 @@ by (graph fingerprint / backend key, program name, feed shapes+dtypes), so a
 second run with same-shaped feeds performs ZERO new lowerings (observable
 via `lowering_count()`).  This is the hot-path contract the serving stack
 relies on: `GraphExecutor.run` no longer re-jits every node on every call.
+
+Execution itself is driven by per-shape ExecutionPlans: the first run per
+feed/param shape signature resolves every value name to an integer slot,
+binds the cached executables directly, and decides which dead intermediates
+to donate; steady-state `Engine.run` is then a tight loop over prebound
+executables (benchmarks/bench_dispatch.py measures the dispatch overhead
+against the legacy dict-driven loop, kept as `Engine.run_legacy`).
 """
 from __future__ import annotations
 
 import abc
 import functools
+import threading
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
 
@@ -155,42 +169,78 @@ def _note_lowering() -> None:
 class ExecutableCache:
     """Shape-keyed store of compiled XLA executables (plus their traffic
     stats).  One process-wide instance backs every CompiledApp/GraphExecutor;
-    `get_or_build` counts a lowering on every miss."""
+    `get_or_build` counts a lowering on every miss.
 
-    def __init__(self):
-        self._store: dict[Any, Any] = {}
+    Thread-safe: the serve engine shares this one cache across instances
+    (and request threads), so `get_or_build` holds a lock for the whole
+    check-build-insert -- at most one build per key, ever.  Accepted
+    tradeoff: a thread hitting a DIFFERENT key blocks while a build is in
+    flight; builds happen once per (program, shape) lifetime, hits are the
+    steady state, and the ExecutionPlan fast path does not touch the cache
+    at all.  `capacity` optionally bounds the store with LRU eviction
+    (`evictions` in stats); the default None preserves the historical
+    unbounded behavior."""
+
+    def __init__(self, capacity: int | None = None):
+        self._store: OrderedDict[Any, Any] = OrderedDict()
+        self._lock = threading.RLock()
+        self.capacity = capacity
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self):
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def __contains__(self, key):
-        return key in self._store
+        with self._lock:
+            return key in self._store
 
     def get(self, key):
-        return self._store.get(key)
+        """Passive lookup (introspection/tests): no LRU touch, no counters."""
+        with self._lock:
+            return self._store.get(key)
 
     def keys(self):
-        return list(self._store)
+        with self._lock:
+            return list(self._store)
 
     def get_or_build(self, key, build: Callable[[], Any]):
-        hit = self._store.get(key)
-        if hit is not None:
-            self.hits += 1
-            return hit
-        self.misses += 1
-        val = build()
-        _note_lowering()
-        self._store[key] = val
-        return val
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None:
+                self.hits += 1
+                self._store.move_to_end(key)
+                return hit
+            self.misses += 1
+            val = build()
+            _note_lowering()
+            self._store[key] = val
+            self._evict()
+            return val
+
+    def set_capacity(self, capacity: int | None) -> None:
+        with self._lock:
+            self.capacity = capacity
+            self._evict()
+
+    def _evict(self) -> None:
+        if self.capacity is None:
+            return
+        while len(self._store) > max(self.capacity, 1):
+            self._store.popitem(last=False)
+            self.evictions += 1
 
     def stats(self) -> dict[str, int]:
-        return {"size": len(self._store), "hits": self.hits,
-                "misses": self.misses}
+        with self._lock:
+            return {"size": len(self._store), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "capacity": self.capacity}
 
     def clear(self):
-        self._store.clear()
+        with self._lock:
+            self._store.clear()
 
 
 _CACHE = ExecutableCache()
@@ -220,12 +270,15 @@ class Program:
     """One lowerable unit: a callable over (feed, params) dicts.
 
     fn=None marks a zero-cost op (reshape/output outside any sf-node) that is
-    evaluated inline without a kernel launch."""
+    evaluated inline without a kernel launch.  `outs` is the static order of
+    the result dict's keys -- the ExecutionPlan binds them to integer slots
+    once instead of walking dict results per call."""
     name: str
     needs: tuple[str, ...]                # graph values consumed
     params: tuple[str, ...] = ()          # param keys consumed
     fn: Callable | None = None            # (feed, params) -> {name: value}
     node: Node | None = None              # set for inline (free) programs
+    outs: tuple[str, ...] = ()            # value names produced, in order
 
 
 @dataclass
@@ -252,34 +305,69 @@ def _op_program(g: Graph, node: Node) -> Program:
         ins = [feed[i] for i in _n.inputs]
         return {_n.name: _eval_node(_n, ins, params.get(_n.name))}
 
-    return Program(node.name, tuple(node.inputs), (node.name,), fn)
+    return Program(node.name, tuple(node.inputs), (node.name,), fn,
+                   outs=(node.name,))
 
 
 def _free_program(node: Node) -> Program:
-    return Program(node.name, tuple(node.inputs), (), None, node)
+    return Program(node.name, tuple(node.inputs), (), None, node,
+                   outs=(node.name,))
 
 
-def _sf_program(g: Graph, name: str, members: list[str]) -> Program:
+def _sf_program(g: Graph, name: str, members: list[str],
+                matches: Iterable | None = None) -> Program:
+    """Fused program for one sf-node.
+
+    `matches` (KernelMatch objects from core/lower.py, duck-typed: `.ops`,
+    `.out`, `.call(vals, params)`) replace runs of member ops with real
+    Pallas kernel calls; the members they cover are skipped by the jnp
+    interpretation loop and their internal intermediates never materialize.
+    Without matches the program replays every member's jnp closure (the
+    pre-lowering vertical-fusion-per-sf-node behavior)."""
     mset = set(members)
     need = tuple(dict.fromkeys(
         i for m in members for i in g.nodes[m].inputs if i not in mset))
     pkeys = tuple(members)
+    match_of: dict[str, Any] = {}
+    for km in (matches or ()):
+        for o in km.ops:
+            match_of[o] = km
+    # static schedule: member ops in topo order, each match emitted once at
+    # its first member's position (all kernel inputs are available there)
+    schedule: list[tuple[bool, Any]] = []
+    emitted: set[int] = set()
+    for m in members:
+        km = match_of.get(m)
+        if km is not None:
+            if id(km) not in emitted:
+                schedule.append((True, km))
+                emitted.add(id(km))
+            continue
+        schedule.append((False, g.nodes[m]))
+    # exports: values consumed outside the sf-node (queue payloads stay
+    # on-chip) -- match internals are single-consumer-internal by matcher
+    # contract, so they are never exports
+    internal = {o for km in (matches or ()) for o in km.ops if o != km.out}
+    exports = []
+    for m in members:
+        if m in internal:
+            continue
+        cons = g.consumers(m)
+        if not cons or any(c.name not in mset for c in cons):
+            exports.append(m)
+    exports = tuple(exports)
 
     def fn(feed: dict[str, jax.Array], params: dict) -> dict:
         vals = dict(feed)
-        for m in members:
-            n = g.nodes[m]
-            ins = [vals[i] for i in n.inputs]
-            vals[m] = _eval_node(n, ins, params.get(m))
-        # export only values consumed outside (queue payloads stay on-chip)
-        out = {}
-        for m in members:
-            cons = g.consumers(m)
-            if not cons or any(c.name not in mset for c in cons):
-                out[m] = vals[m]
-        return out
+        for is_kernel, item in schedule:
+            if is_kernel:
+                vals[item.out] = item.call(vals, params)
+            else:
+                ins = [vals[i] for i in item.inputs]
+                vals[item.name] = _eval_node(item, ins, params.get(item.name))
+        return {m: vals[m] for m in exports}
 
-    return Program(name, need, pkeys, fn)
+    return Program(name, need, pkeys, fn, outs=exports)
 
 
 class ExecutorBackend(abc.ABC):
@@ -341,21 +429,29 @@ class VerticalBackend(ExecutorBackend):
                 vals[n.name] = _eval_node(n, ins, params.get(n.name))
             return {name: vals[src] for name, src in exports.items()}
 
-        return [Program(f"{g.name}.vertical", inputs, pkeys, fn)]
+        return [Program(f"{g.name}.vertical", inputs, pkeys, fn,
+                        outs=tuple(exports))]
 
 
 class KitsuneBackend(ExecutorBackend):
-    """sf-nodes as single fused programs; everything else per-op BSP."""
+    """sf-nodes as single fused programs; everything else per-op BSP.
+
+    `lowering` (a core/lower.py LoweringPlan, or None) maps sf-node member
+    chains onto real Pallas kernels inside the fused programs."""
 
     mode = "kitsune"
 
-    def __init__(self, graph: Graph, sf_members: Iterable[tuple[str, list[str]]]):
+    def __init__(self, graph: Graph, sf_members: Iterable[tuple[str, list[str]]],
+                 lowering=None):
         super().__init__(graph)
         self.sf_members = [(name, list(members)) for name, members in sf_members]
+        self.lowering = lowering
 
     def key(self) -> tuple:
+        low_sig = self.lowering.signature() if self.lowering is not None else ()
         return (self.mode,
-                tuple((n, tuple(m)) for n, m in self.sf_members))
+                tuple((n, tuple(m)) for n, m in self.sf_members),
+                low_sig)
 
     def plan(self) -> list[Program]:
         g = self.graph
@@ -372,7 +468,9 @@ class KitsuneBackend(ExecutorBackend):
             sf = sf_of.get(n.name)
             if sf is not None:
                 if sf not in emitted:
-                    progs.append(_sf_program(g, sf, members_of[sf]))
+                    matches = (self.lowering.matches_for(sf)
+                               if self.lowering is not None else None)
+                    progs.append(_sf_program(g, sf, members_of[sf], matches))
                     emitted.add(sf)
                 continue
             progs.append(_free_program(n) if n.is_free else
@@ -382,13 +480,13 @@ class KitsuneBackend(ExecutorBackend):
 
 def make_backend(mode: str, graph: Graph,
                  sf_members: Iterable[tuple[str, list[str]]] | None = None,
-                 ) -> ExecutorBackend:
+                 lowering=None) -> ExecutorBackend:
     if mode == "bsp":
         return BSPBackend(graph)
     if mode == "vertical":
         return VerticalBackend(graph)
     if mode == "kitsune":
-        return KitsuneBackend(graph, sf_members or [])
+        return KitsuneBackend(graph, sf_members or [], lowering)
     raise ValueError(f"unknown executor mode {mode!r}")
 
 
@@ -402,15 +500,146 @@ class ExecutionReport:
     bytes_accessed: float      # sum of program-boundary bytes (HBM traffic)
     n_programs: int            # kernels launched (BSP: one per op)
     temp_bytes: float = 0.0    # XLA temp allocations (on-chip residency proxy)
-    cache_hits: int = 0        # programs served from the executable cache
+    # programs bound without a fresh lowering this call.  On the plan fast
+    # path executables are PREBOUND, so hits == n_programs by definition and
+    # executable_cache().stats() no longer advances per call.
+    cache_hits: int = 0
     cache_misses: int = 0      # programs lowered+compiled fresh this call
+
+
+def _plan_key(obj) -> tuple:
+    """Cheap shape/dtype key over (nested dicts of) arrays -- ONE of these
+    per run() call selects the ExecutionPlan, replacing the old per-program
+    `_shape_key` (whose `str(treedef)` dominated dispatch time).  Dtypes are
+    kept as np.dtype objects: they hash fine and `str(dtype)` alone costs
+    tens of microseconds per call.  Dict items are sorted so key ORDER never
+    splits plans (tree_flatten, which the legacy key used, sorts too)."""
+    if isinstance(obj, dict):
+        return tuple((k, _plan_key(v)) for k, v in sorted(obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return (len(obj),) + tuple(_plan_key(v) for v in obj)
+    shape = getattr(obj, "shape", None)
+    if shape is not None:
+        return (tuple(shape), obj.dtype)
+    return (type(obj).__name__, repr(obj))
+
+
+def _donation_supported() -> bool:
+    """Whether this backend actually reuses donated buffers.  The plan
+    computes donation decisions regardless (introspectable/testable); the
+    decision is applied to jit only where the runtime honors it."""
+    return jax.default_backend() in ("cpu", "tpu", "gpu")
+
+
+@dataclass
+class _StepSpec:
+    """Shape-independent schedule entry (built once per Engine)."""
+    prog: Program
+    in_slots: tuple[int, ...]
+    out_slots: tuple[int, ...]
+    donate: tuple[int, ...]     # positions in prog.needs safe to donate
+    release: tuple[int, ...]    # buffer slots dead after this step
+
+
+@dataclass
+class _FreeSpec:
+    node: Node
+    in_slots: tuple[int, ...]
+    out_slot: int
+    release: tuple[int, ...]
+
+
+class _BoundStep:
+    """One executable step of a compiled ExecutionPlan: the cached XLA
+    executable plus prebound integer slots -- steady-state run() is a loop
+    over these with no dict keying, no cache lookups, no shape hashing.
+    Programs with no params are compiled WITHOUT the psub argument (an empty
+    dict still costs a pytree flatten on every dispatch)."""
+    __slots__ = ("call", "in_slots", "out_slots", "pkeys", "release")
+
+    def __init__(self, exe, spec: _StepSpec, pkeys: tuple[str, ...]):
+        self.call = exe.compiled
+        self.in_slots = spec.in_slots
+        self.out_slots = spec.out_slots
+        self.pkeys = pkeys
+        self.release = spec.release
+
+
+def _compile_step(st) -> Callable:
+    """Specialize one plan step into a closure `step(buf, params)` -- the
+    steady-state loop is then one Python call per step with every slot,
+    executable and release list already bound."""
+    rel = st.release
+    if type(st) is _FreeSpec:
+        node, in_slots, out = st.node, st.in_slots, st.out_slot
+
+        def step(buf, params):
+            buf[out] = _eval_node(node, [buf[i] for i in in_slots], None)
+            for r in rel:
+                buf[r] = None
+        return step
+    call, in_slots, out_slots, pkeys = (st.call, st.in_slots, st.out_slots,
+                                        st.pkeys)
+    if not pkeys and len(in_slots) == 1 and len(out_slots) == 1:
+        i0, o0 = in_slots[0], out_slots[0]
+
+        def step(buf, params):
+            buf[o0] = call(buf[i0])[0]
+            for r in rel:
+                buf[r] = None
+        return step
+    if not pkeys:
+        def step(buf, params):
+            outs = call(*[buf[i] for i in in_slots])
+            for o, v in zip(out_slots, outs):
+                buf[o] = v
+            for r in rel:
+                buf[r] = None
+        return step
+
+    def step(buf, params):
+        outs = call({k: params[k] for k in pkeys}, *[buf[i] for i in in_slots])
+        for o, v in zip(out_slots, outs):
+            buf[o] = v
+        for r in rel:
+            buf[r] = None
+    return step
+
+
+class ExecutionPlan:
+    """Everything `run()` needs for one (feed, param) shape signature:
+    prebound executables, slot wiring, and precomputed traffic totals.
+    `steps` keeps the bound step objects for introspection; `fns` are the
+    specialized closures the hot loop actually runs."""
+    __slots__ = ("steps", "fns", "bytes_accessed", "temp_bytes",
+                 "n_programs")
+
+    def __init__(self, steps, bytes_accessed, temp_bytes, n_programs):
+        self.steps = steps
+        self.fns = tuple(_compile_step(st) for st in steps)
+        self.bytes_accessed = bytes_accessed
+        self.temp_bytes = temp_bytes
+        self.n_programs = n_programs
 
 
 class Engine:
     """Runs a backend's program list against the process-wide executable
     cache.  `engine_key` namespaces cache entries (graph fingerprint +
     backend/options signature), so identical graphs share executables across
-    Engine instances."""
+    Engine instances.
+
+    Execution is plan-based: the first `run()` per (feed, param) shape
+    signature compiles an ExecutionPlan -- feed/param names resolved to
+    integer slots, cache keys and shape keys built once, executables bound
+    directly, intermediates in a flat buffer list, and arguments donated
+    where the value has no later consumer.  Steady-state `run()` is then a
+    loop over prebound executables with near-zero Python overhead (see
+    benchmarks/bench_dispatch.py; `run_legacy` keeps the historical
+    dict-driven loop as the measured baseline and differential oracle)."""
+
+    # plans an engine keeps live; beyond this the least-recent shape's plan
+    # (and its pinned executable refs) is dropped and rebuilt on next use
+    MAX_PLANS = 64
 
     def __init__(self, backend: ExecutorBackend, engine_key: tuple,
                  cache: ExecutableCache | None = None):
@@ -419,13 +648,187 @@ class Engine:
         self.programs = backend.plan()
         self.engine_key = (engine_key,) + backend.key()
         self.cache = cache if cache is not None else _CACHE
+        self._plans: OrderedDict[tuple, ExecutionPlan] = OrderedDict()
+        self._build_skeleton()
 
+    # -- shape-independent schedule (once per Engine) ----------------------
+    def _build_skeleton(self) -> None:
+        g = self.graph
+        slots: dict[str, int] = {}
+
+        def slot(name: str) -> int:
+            return slots.setdefault(name, len(slots))
+
+        self._feed_slots = tuple(
+            (slot(n.name), n.name) for n in g.topo()
+            if n.kind in ("input", "const"))
+        feed_names = {name for _, name in self._feed_slots}
+        # run outputs: output nodes, else leaves (historical contract --
+        # unconsumed feeds count as leaves, matching the legacy vals dict)
+        out_nodes = [n.name for n in g.topo() if n.kind == "output"]
+        if out_nodes:
+            run_outs = list(out_nodes)
+        else:
+            succ = g.successors_map()
+            run_outs = [n.name for n in g.topo() if not succ.get(n.name)]
+        # last reader of every value (END for run outputs)
+        END = len(self.programs)
+        last_use: dict[str, int] = {}
+        read_by_free: set[str] = set()
+        exe_produced: set[str] = set()
+        for idx, prog in enumerate(self.programs):
+            for nm in prog.needs:
+                last_use[nm] = idx
+            if prog.fn is None:
+                read_by_free.update(prog.needs)
+        for name in run_outs:
+            last_use[name] = END
+        steps: list[Any] = []
+        for idx, prog in enumerate(self.programs):
+            in_slots = tuple(slot(nm) for nm in prog.needs)
+            release = tuple(slots[nm] for nm in prog.needs
+                            if last_use.get(nm) == idx)
+            if prog.fn is None:
+                steps.append(_FreeSpec(prog.node, in_slots,
+                                       slot(prog.node.name), release))
+                continue
+            # donate a position iff the value dies here, was produced by an
+            # earlier executable (fresh XLA buffer -- feeds/consts belong to
+            # the caller, free-op results may be views), no free op ever
+            # reads it (views would share the donated buffer), and the name
+            # is not passed at two positions (duplicated inputs like
+            # mul(a, a) would donate one buffer twice)
+            donate = tuple(
+                p for p, nm in enumerate(prog.needs)
+                if (last_use.get(nm) == idx and nm in exe_produced
+                    and nm not in read_by_free and nm not in feed_names
+                    and prog.needs.count(nm) == 1))
+            out_slots = tuple(slot(nm) for nm in prog.outs)
+            steps.append(_StepSpec(prog, in_slots, out_slots, donate, release))
+            exe_produced.update(prog.outs)
+        self._steps = steps
+        self._run_out_slots = tuple((name, slots[name]) for name in run_outs)
+        self._n_slots = len(slots)
+
+    # -- execution ---------------------------------------------------------
     def run(self, feeds: dict[str, jax.Array], params: dict,
             measure: bool = True) -> ExecutionReport:
-        """Execute the program list.  Executables are always served from the
-        cache (lowering happens at most once per shape); measure=False only
-        zeroes the traffic/program accounting in the report, matching the
-        historical GraphExecutor contract."""
+        """Execute via the per-shape ExecutionPlan.  The first call per
+        shape signature builds the plan (lowering at most once per shape,
+        via the process-wide cache); later calls replay the prebound
+        executables.  measure=False only zeroes the traffic/program
+        accounting, matching the historical GraphExecutor contract."""
+        key = (_plan_key(feeds), _plan_key(params))
+        plan = self._plans.get(key)
+        if plan is None:
+            return self._build_and_run(key, feeds, params, measure)
+        self._plans.move_to_end(key)
+        buf: list[Any] = [None] * self._n_slots
+        for s, name in self._feed_slots:
+            if name not in feeds:
+                raise KeyError(f"missing feed for {name}")
+            buf[s] = feeds[name]
+        for step in plan.fns:
+            step(buf, params)
+        outs = {name: buf[s] for name, s in self._run_out_slots}
+        if not measure:
+            return ExecutionReport(outs, 0.0, 0, 0.0, plan.n_programs, 0)
+        return ExecutionReport(outs, plan.bytes_accessed, plan.n_programs,
+                               plan.temp_bytes, plan.n_programs, 0)
+
+    def _build_and_run(self, key: tuple, feeds: dict, params: dict,
+                       measure: bool) -> ExecutionReport:
+        """First call per shape signature: execute while binding the plan."""
+        buf: list[Any] = [None] * self._n_slots
+        for s, name in self._feed_slots:
+            if name not in feeds:
+                raise KeyError(f"missing feed for {name}")
+            buf[s] = feeds[name]
+        bound: list[Any] = []
+        total_bytes = total_temp = 0.0
+        n_programs = hits = misses = 0
+        donate_ok = _donation_supported()
+        for spec in self._steps:
+            if type(spec) is _FreeSpec:
+                buf[spec.out_slot] = _eval_node(
+                    spec.node, [buf[i] for i in spec.in_slots], None)
+                bound.append(spec)
+            else:
+                prog = spec.prog
+                pkeys = tuple(k for k in prog.params if k in params)
+                psub = {k: params[k] for k in pkeys}
+                ins = tuple(buf[i] for i in spec.in_slots)
+                ckey = self.engine_key + (
+                    "plan", prog.name, spec.donate if donate_ok else (),
+                    _plan_key(ins), _plan_key(psub))
+                before = self.cache.misses
+                exe = self.cache.get_or_build(
+                    ckey, lambda: self._build_positional(
+                        prog, ins, psub,
+                        spec.donate if donate_ok else ()))
+                if self.cache.misses > before:
+                    misses += 1
+                else:
+                    hits += 1
+                outs = (exe.compiled(psub, *ins) if pkeys
+                        else exe.compiled(*ins))
+                st = _BoundStep(exe, spec, pkeys)
+                for o, v in zip(st.out_slots, outs):
+                    buf[o] = v
+                total_bytes += exe.bytes_accessed
+                total_temp += exe.temp_bytes
+                n_programs += 1
+                bound.append(st)
+            for i in spec.release:
+                buf[i] = None
+        self._plans[key] = ExecutionPlan(bound, total_bytes, total_temp,
+                                         n_programs)
+        while len(self._plans) > self.MAX_PLANS:
+            # bound per-engine plan memory: a dropped plan releases its
+            # executable refs (the shared cache's own LRU can then evict)
+            # and is transparently rebuilt from cache on next use
+            self._plans.popitem(last=False)
+        outs = {name: buf[s] for name, s in self._run_out_slots}
+        if not measure:
+            return ExecutionReport(outs, 0.0, 0, 0.0, hits, misses)
+        return ExecutionReport(outs, total_bytes, n_programs, total_temp,
+                               hits, misses)
+
+    @staticmethod
+    def _build_positional(prog: Program, ins: tuple, psub: dict,
+                          donate: tuple[int, ...]) -> _Executable:
+        if psub:
+            def wrapped(psub_, *arrs):
+                out = prog.fn(dict(zip(prog.needs, arrs)), psub_)
+                return tuple(out[k] for k in prog.outs)
+            args = (psub,) + ins
+            shift = 1
+        else:  # param-less program: drop the dict arg from the signature
+            def wrapped(*arrs):
+                out = prog.fn(dict(zip(prog.needs, arrs)), {})
+                return tuple(out[k] for k in prog.outs)
+            args = ins
+            shift = 0
+        jit_kw = {}
+        if donate:
+            jit_kw["donate_argnums"] = tuple(p + shift for p in donate)
+        with warnings.catch_warnings():
+            # an unusable donation (XLA declined to alias, e.g. on CPU) is
+            # only a missed reuse -- the dead buffer is freed either way
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            compiled = jax.jit(wrapped, **jit_kw).lower(*args).compile()
+        b, t = _traffic(compiled)
+        return _Executable(compiled, b, t)
+
+    # -- pre-plan reference loop (bench baseline + differential oracle) ----
+    def run_legacy(self, feeds: dict[str, jax.Array], params: dict,
+                   measure: bool = True) -> ExecutionReport:
+        """The historical dict-driven dispatch loop: per-program shape
+        keying + cache lookups + dict feeds on EVERY call.  Numerically
+        identical to `run()`; kept so bench_dispatch can report the
+        before/after dispatch overhead and tests can differential-check the
+        plan runtime against it."""
         g = self.graph
         for n in g.topo():
             if n.kind in ("input", "const") and n.name not in feeds:

@@ -14,7 +14,9 @@ Transforms each selected sf-node into a spatial pipeline:
      like vertical fusion does *within* one pipeline stage.
 
 Output: a PipelinedGraph whose stages are the load-balancing units for
-Algorithm 2 (balance.py).
+Algorithm 2 (balance.py) and the pattern-matching units for the
+`lower_kernels` pass (lower.py), which maps stage chains onto the real
+Pallas dataflow kernels in repro/kernels/.
 """
 from __future__ import annotations
 

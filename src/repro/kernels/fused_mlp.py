@@ -36,10 +36,26 @@ _ACTS = {
     "identity": lambda x: x,
 }
 
+_SQRT_2_OVER_PI = 0.7978845608028654
+_GELU_C = 0.044715
+
+
+def _dgelu(x):
+    """Closed-form derivative of the tanh-approximated gelu (the default
+    `jax.nn.gelu`): 0.5(1+tanh u) + 0.5 x sech^2(u) u', with
+    u = sqrt(2/pi)(x + 0.044715 x^3).  Replaces a per-element
+    `vmap(grad(gelu))` that was catastrophically slow to trace and run;
+    differential-tested against `jax.grad` in tests/test_kernels.py."""
+    u = _SQRT_2_OVER_PI * (x + _GELU_C * x * x * x)
+    t = jnp.tanh(u)
+    du = _SQRT_2_OVER_PI * (1.0 + 3.0 * _GELU_C * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+
+
 _DACTS = {  # d/dx act(x)
     "relu": lambda x: (x > 0).astype(x.dtype),
     "identity": lambda x: jnp.ones_like(x),
-    "gelu": lambda x: jax.vmap(jax.grad(lambda t: jax.nn.gelu(t)))(x.reshape(-1)).reshape(x.shape),
+    "gelu": _dgelu,
     "silu": lambda x: jax.nn.sigmoid(x) * (1 + x * (1 - jax.nn.sigmoid(x))),
 }
 
@@ -66,7 +82,8 @@ def _fwd_kernel(x_ref, w1_ref, w2_ref, o_ref, acc_ref, *, act: str, n_h: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _fwd_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_h: int):
+def _fwd_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+                       act: str, n_h: int):
     h = pl.program_id(1)
 
     @pl.when(h == 0)
@@ -76,7 +93,7 @@ def _fwd_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_h: in
     x = x_ref[...]
     g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
     u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
-    t = jax.nn.silu(g) * u
+    t = _ACTS[act](g) * u
     acc_ref[...] += jnp.dot(t.astype(x.dtype), wd_ref[...],
                             preferred_element_type=jnp.float32)
 
@@ -110,15 +127,19 @@ def fused_mlp_fwd(x: jax.Array, w1: jax.Array, w2: jax.Array,
 
 
 def fused_mlp_swiglu_fwd(x: jax.Array, wg: jax.Array, wu: jax.Array,
-                         wd: jax.Array, *, block_m: int = 128,
-                         block_h: int = 512, interpret: bool = False) -> jax.Array:
+                         wd: jax.Array, *, act: str = "silu",
+                         block_m: int = 128, block_h: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """(act(x @ wg) * (x @ wu)) @ wd -- SwiGLU with act=silu; the gate
+    activation is a parameter so plain gate*up dual-GEMM blocks (act=
+    identity, the builder-graph form) lower onto the same kernel."""
     m, d_in = x.shape
     _, hdim = wg.shape
     d_out = wd.shape[1]
     assert m % block_m == 0 and hdim % block_h == 0
     n_m, n_h = m // block_m, hdim // block_h
     return pl.pallas_call(
-        functools.partial(_fwd_kernel_swiglu, n_h=n_h),
+        functools.partial(_fwd_kernel_swiglu, act=act, n_h=n_h),
         grid=(n_m, n_h),
         in_specs=[
             pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),

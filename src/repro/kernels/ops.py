@@ -90,7 +90,8 @@ def mlp(x: jax.Array, w1: jax.Array, w2: jax.Array, *, act: str = "gelu",
     return y.reshape(*lead, w2.shape[1])
 
 
-def mlp_swiglu(x: jax.Array, wg, wu, wd, *, cfg: KernelConfig = KernelConfig()):
+def mlp_swiglu(x: jax.Array, wg, wu, wd, *, act: str = "silu",
+               cfg: KernelConfig = KernelConfig()):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if cfg.use_pallas:
@@ -98,11 +99,11 @@ def mlp_swiglu(x: jax.Array, wg, wu, wd, *, cfg: KernelConfig = KernelConfig()):
         bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
         bh = cfg.block_h if wg.shape[1] % cfg.block_h == 0 else wg.shape[1]
         x2p, pad = _pad_to(x2, 0, bm)
-        y = fused_mlp_swiglu_fwd(x2p, wg, wu, wd, block_m=bm, block_h=bh,
-                                 interpret=cfg.interpret)
+        y = fused_mlp_swiglu_fwd(x2p, wg, wu, wd, act=act, block_m=bm,
+                                 block_h=bh, interpret=cfg.interpret)
         y = y[:m] if pad else y
     else:
-        y = ref.mlp_swiglu_ref(x2, wg, wu, wd)
+        y = ref.mlp_swiglu_ref(x2, wg, wu, wd, act=act)
     return y.reshape(*lead, wd.shape[1])
 
 

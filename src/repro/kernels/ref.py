@@ -20,10 +20,10 @@ def mlp_ref(x, w1, w2, act: str = "gelu"):
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def mlp_swiglu_ref(x, wg, wu, wd):
+def mlp_swiglu_ref(x, wg, wu, wd, act: str = "silu"):
     g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
     u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
-    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = (_ACTS[act](g) * u).astype(x.dtype)
     return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)
 
 

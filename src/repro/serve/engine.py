@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.compiler import cached_jit
+from repro.core.executor import executable_cache
 from repro.distributed.sharding import NULL
 from repro.kernels import KernelConfig
 from repro.models import get_model
@@ -37,6 +38,16 @@ class ServeConfig:
     # chosen executor backend -- the decode loop goes through the same
     # dataflow pipeline as every other workload.
     compile_mode: str | None = None
+    # Optional LRU bound for the PROCESS-WIDE executable cache.  Engines of
+    # many shapes/configs share one cache; long-lived serving processes can
+    # cap it here (evicted shapes re-lower on next use; eviction counts are
+    # in executable_cache().stats()).  None (default) leaves whatever bound
+    # is already in force untouched -- the knob is global and
+    # last-setter-wins, so set it from ONE place in a deployment.  Note the
+    # cap bounds the cache's OWN refs; live ExecutionPlans keep their bound
+    # executables until the per-engine plan LRU (Engine.MAX_PLANS) or the
+    # engine itself drops them.
+    cache_capacity: int | None = None
 
 
 def serve_step(params, state, cfg: ArchConfig, *,
@@ -84,6 +95,10 @@ class ServingEngine:
         self.cache = self.model.init_cache(sc.batch, sc.max_len)
         self.tokens = jnp.zeros((sc.batch,), jnp.int32)
         self.pos = jnp.zeros((), jnp.int32)
+        if sc.cache_capacity is not None:
+            # bound the shared executable store (thread-safe LRU): serving
+            # processes otherwise accumulate one entry per shape forever
+            executable_cache().set_capacity(sc.cache_capacity)
         # Decode tick through the compiler's executable cache: the first
         # tick per (batch, cache shape) lowers+compiles; every later tick --
         # and every later engine with the same config -- reuses the cached

@@ -1,0 +1,265 @@
+"""Tests for the ExecutionPlan runtime (core/executor.py Engine) and the
+thread-safe LRU ExecutableCache.
+
+Contract under test:
+  * the plan path is numerically identical to the legacy dict-driven loop
+    (Engine.run_legacy) and reports identical traffic accounting,
+  * donation decisions: only executable-produced intermediates with no
+    later consumer are donated -- never user feeds, consts, run outputs,
+    or values free ops read (views),
+  * new shapes build a second plan without disturbing the first,
+  * ExecutableCache: concurrent get_or_build builds once; LRU capacity
+    evicts oldest entries and counts evictions.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.executor import ExecutableCache, _FreeSpec, _StepSpec
+
+from test_compile_api import TINY_APPS, mlp_graph
+
+
+def _chain(n_ops=6, dim=8):
+    g = repro.Graph("chain")
+    g.input("x", (dim, dim), "float32")
+    cur = "x"
+    for i in range(n_ops):
+        cur = g.elementwise(f"e{i}", [cur], "relu").name
+    g.output("y", cur)
+    return g
+
+
+class TestPlanVsLegacy:
+    @pytest.mark.parametrize("name", ["nerf", "dlrm"])
+    def test_outputs_and_accounting_match(self, name):
+        g, feeds = TINY_APPS[name]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        app = repro.compile(g, mode="kitsune")
+        plan_rep = app.run(feeds, params)
+        legacy_rep = app._engine.run_legacy(feeds, params)
+        assert plan_rep.outputs.keys() == legacy_rep.outputs.keys()
+        for k in plan_rep.outputs:
+            np.testing.assert_allclose(
+                np.asarray(plan_rep.outputs[k], np.float32),
+                np.asarray(legacy_rep.outputs[k], np.float32),
+                rtol=1e-5, atol=1e-5, err_msg=f"{name}: plan vs legacy {k}")
+        assert plan_rep.n_programs == legacy_rep.n_programs
+        assert plan_rep.bytes_accessed == pytest.approx(
+            legacy_rep.bytes_accessed)
+
+    def test_measure_false_zeroes_accounting(self):
+        g = _chain()
+        app = repro.compile(g, mode="bsp")
+        x = {"x": jnp.ones((8, 8), jnp.float32)}
+        app.run(x, {})
+        rep = app._engine.run(x, {}, measure=False)
+        assert rep.bytes_accessed == 0 and rep.n_programs == 0
+        assert "y" in rep.outputs
+
+    def test_new_shapes_build_second_plan(self):
+        g = repro.Graph("wide")
+        g.input("x", (8, 8), "float32")
+        g.elementwise("e0", ["x"], "relu")
+        g.output("y", "e0")
+        app = repro.compile(g, mode="bsp")
+        a = app.run({"x": jnp.ones((8, 8), jnp.float32)}, {})
+        b = app.run({"x": jnp.ones((4, 4), jnp.float32)}, {})
+        assert len(app._engine._plans) == 2
+        assert a.outputs["y"].shape == (8, 8)
+        assert b.outputs["y"].shape == (4, 4)
+        # both plans still replay without rebuilds
+        before = repro.lowering_count()
+        app.run({"x": jnp.zeros((8, 8), jnp.float32)}, {})
+        app.run({"x": jnp.zeros((4, 4), jnp.float32)}, {})
+        assert repro.lowering_count() == before
+
+    def test_feed_dict_key_order_shares_one_plan(self):
+        g = repro.Graph("two_feeds")
+        g.input("a", (4, 4), "float32")
+        g.input("b", (4, 4), "float32")
+        g.elementwise("s", ["a", "b"], "add")
+        g.output("y", "s")
+        app = repro.compile(g, mode="bsp")
+        x = jnp.ones((4, 4), jnp.float32)
+        app.run({"a": x, "b": x}, {})
+        app.run({"b": x, "a": x}, {})   # same feeds, reversed insertion
+        assert len(app._engine._plans) == 1, \
+            "dict key order must not split execution plans"
+
+    def test_plan_store_is_lru_bounded(self):
+        g = repro.Graph("many_shapes")
+        g.input("x", (8, 8), "float32")
+        g.elementwise("e0", ["x"], "relu")
+        g.output("y", "e0")
+        app = repro.compile(g, mode="bsp")
+        eng = app._engine
+        old_cap, eng.MAX_PLANS = eng.MAX_PLANS, 2
+        try:
+            for n in (4, 5, 6):
+                app.run({"x": jnp.ones((n, n), jnp.float32)}, {})
+            assert len(eng._plans) == 2
+            # evicted shape transparently rebuilds from the shared cache
+            before = repro.lowering_count()
+            rep = app.run({"x": jnp.ones((4, 4), jnp.float32)}, {})
+            assert repro.lowering_count() == before
+            assert rep.outputs["y"].shape == (4, 4)
+        finally:
+            eng.MAX_PLANS = old_cap
+
+    def test_missing_feed_raises_keyerror(self):
+        app = repro.compile(_chain(), mode="bsp")
+        with pytest.raises(KeyError):
+            app.run({}, {})
+        app.run({"x": jnp.ones((8, 8), jnp.float32)}, {})  # plan built
+        with pytest.raises(KeyError):
+            app.run({}, {})  # fast path must validate too
+
+
+class TestDonation:
+    def _specs(self, app):
+        return [s for s in app._engine._steps if type(s) is _StepSpec]
+
+    def test_chain_donates_dead_intermediates_only(self):
+        app = repro.compile(_chain(n_ops=6), mode="bsp")
+        specs = self._specs(app)
+        # e0 consumes the user feed x: never donated
+        assert specs[0].donate == ()
+        # e1..e4 consume a dead executable-produced intermediate: donated
+        for s in specs[1:-1]:
+            assert s.donate == (0,), s.prog.name
+        # e5's result feeds the free output node (a view-maker): its INPUT
+        # is still a dead intermediate -> donated; but e5's own output is
+        # read by a free op so no later step may donate it
+        assert specs[-1].donate == (0,)
+
+    def test_run_outputs_never_donated(self):
+        g = repro.Graph("keep")
+        g.input("x", (8, 8), "float32")
+        g.elementwise("e0", ["x"], "relu")
+        g.elementwise("e1", ["e0"], "relu")
+        g.output("y0", "e0")   # e0 is a run output AND feeds e1
+        g.output("y1", "e1")
+        app = repro.compile(g, mode="bsp")
+        specs = self._specs(app)
+        assert all(s.donate == () for s in specs), \
+            "values that reach run outputs must never be donated"
+        x = jnp.ones((8, 8), jnp.float32)
+        rep = app.run({"x": x}, {})
+        rep2 = app.run({"x": x}, {})  # outputs of run 1 must still be alive
+        np.testing.assert_allclose(np.asarray(rep.outputs["y0"]),
+                                   np.asarray(rep2.outputs["y0"]))
+
+    def test_feeds_survive_repeated_runs(self):
+        app = repro.compile(_chain(), mode="bsp")
+        x = jnp.ones((8, 8), jnp.float32)
+        app.run({"x": x}, {})
+        app.run({"x": x}, {})
+        np.testing.assert_allclose(np.asarray(x), 1.0)  # x not deleted
+
+    def test_duplicated_input_never_donated(self):
+        """mul(a, a) passes ONE buffer at two positions: donating it would
+        hand the same buffer to XLA twice (undefined on donation-honoring
+        backends)."""
+        g = repro.Graph("dup")
+        g.input("x", (8, 8), "float32")
+        g.elementwise("a", ["x"], "relu")
+        g.elementwise("sq", ["a", "a"], "mul")  # a dies here, passed twice
+        g.output("y", "sq")
+        app = repro.compile(g, mode="bsp")
+        spec = {s.prog.name: s for s in self._specs(app)}
+        assert spec["sq"].donate == ()
+        rep = app.run({"x": jnp.ones((8, 8), jnp.float32)}, {})
+        np.testing.assert_allclose(np.asarray(rep.outputs["y"]), 1.0)
+
+    def test_multi_consumer_value_donated_at_last_use_only(self):
+        g = repro.Graph("fanout")
+        g.input("x", (8, 8), "float32")
+        g.elementwise("a", ["x"], "relu")
+        g.elementwise("b", ["a"], "relu")
+        g.elementwise("c", ["a", "b"], "add")   # last reader of a
+        g.output("y", "c")
+        app = repro.compile(g, mode="bsp")
+        spec = {s.prog.name: s for s in self._specs(app)}
+        assert spec["b"].donate == ()           # a still needed by c
+        assert spec["c"].donate == (0, 1)       # a and b both die here
+        rep = app.run({"x": jnp.ones((8, 8), jnp.float32)}, {})
+        assert rep.outputs["y"].shape == (8, 8)
+
+
+class TestExecutableCacheThreadSafety:
+    def test_concurrent_get_or_build_builds_once(self):
+        cache = ExecutableCache()
+        builds = []
+
+        def build():
+            time.sleep(0.02)  # widen the race window
+            builds.append(1)
+            return object()
+
+        results = []
+
+        def worker():
+            results.append(cache.get_or_build("k", build))
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(builds) == 1, "lock must serialize builds per key"
+        assert all(r is results[0] for r in results)
+        assert cache.hits == 7 and cache.misses == 1
+
+    def test_concurrent_distinct_keys(self):
+        cache = ExecutableCache()
+
+        def worker(i):
+            cache.get_or_build(("k", i), lambda: i)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(cache) == 16 and cache.misses == 16
+
+
+class TestExecutableCacheLRU:
+    def test_capacity_evicts_oldest(self):
+        cache = ExecutableCache(capacity=2)
+        cache.get_or_build("a", lambda: "A")
+        cache.get_or_build("b", lambda: "B")
+        cache.get_or_build("c", lambda: "C")   # evicts a
+        assert len(cache) == 2
+        assert cache.get("a") is None and cache.get("c") == "C"
+        assert cache.evictions == 1
+        assert cache.stats()["evictions"] == 1
+
+    def test_hit_refreshes_recency(self):
+        cache = ExecutableCache(capacity=2)
+        cache.get_or_build("a", lambda: "A")
+        cache.get_or_build("b", lambda: "B")
+        cache.get_or_build("a", lambda: "A2")  # hit: refresh a
+        cache.get_or_build("c", lambda: "C")   # evicts b, not a
+        assert cache.get("a") == "A" and cache.get("b") is None
+
+    def test_set_capacity_trims(self):
+        cache = ExecutableCache()
+        for i in range(5):
+            cache.get_or_build(i, lambda i=i: i)
+        cache.set_capacity(2)
+        assert len(cache) == 2 and cache.evictions == 3
+        assert cache.get(3) == 3 and cache.get(4) == 4
+
+    def test_unbounded_by_default(self):
+        cache = ExecutableCache()
+        for i in range(100):
+            cache.get_or_build(i, lambda i=i: i)
+        assert len(cache) == 100 and cache.evictions == 0

@@ -254,3 +254,45 @@ class TestOpsDispatch:
         a = decode_attention(q, k, v, valid_len=100, cfg=KernelConfig(use_pallas=False))
         b = decode_attention(q, k, v, valid_len=100, cfg=KC)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# activation derivatives (closed forms used inside the backward kernels)
+# ---------------------------------------------------------------------------
+
+class TestActDerivatives:
+    @pytest.mark.parametrize("act", ["gelu", "relu", "silu", "identity"])
+    def test_dact_matches_jax_grad(self, act):
+        """_DACTS holds closed forms (the gelu one replaced a per-element
+        vmap(grad) that was catastrophically slow); differential-test every
+        entry against jax.grad of the matching forward activation."""
+        from repro.kernels.fused_mlp import _ACTS, _DACTS
+        x = jnp.linspace(-6.0, 6.0, 513, dtype=jnp.float32)
+        if act == "relu":
+            x = x[jnp.abs(x) > 1e-3]  # grad undefined at exactly 0
+        got = _DACTS[act](x)
+        want = jax.vmap(jax.grad(lambda t: _ACTS[act](t)))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_dgelu_is_closed_form(self):
+        """The gelu derivative must not be built from jax.grad (tracing a
+        grad per element is what made the old version pathological)."""
+        from repro.kernels import fused_mlp
+        names = fused_mlp._dgelu.__code__.co_names
+        assert "grad" not in names and "vmap" not in names, names
+        assert fused_mlp._DACTS["gelu"] is fused_mlp._dgelu
+
+    def test_swiglu_identity_act_is_plain_gate_mul(self):
+        """act='identity' turns the SwiGLU kernel into gate*up -- the form
+        the lower_kernels pass targets for builder dual-GEMM blocks."""
+        d, h, o = 32, 128, 32
+        x = rand(0, (64, d), jnp.float32)
+        wg, wu, wd = (rand(1, (d, h), jnp.float32),
+                      rand(2, (d, h), jnp.float32),
+                      rand(3, (h, o), jnp.float32))
+        got = fused_mlp_swiglu_fwd(x, wg, wu, wd, act="identity",
+                                   block_m=64, block_h=128, interpret=True)
+        want = ((x @ wg) * (x @ wu)) @ wd
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,258 @@
+"""Tests for the `lower_kernels` pass (core/lower.py) and lowered execution.
+
+Contract under test:
+  * the pass matches the MLP, SwiGLU, attention and split-reduction
+    patterns of the five challenge apps onto the real Pallas kernels,
+  * lowered kitsune execution (interpret mode on CPU) is numerically
+    identical to bsp / vertical / lowering-disabled kitsune,
+  * a traced config-zoo sample stays exact through the pass (fallbacks keep
+    the jnp closures; reasons are surfaced),
+  * the zero-relowering hot-path contract survives lowering,
+  * describe() reports lowered stages and per-op fallback reasons.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import CompilerOptions
+from repro.core.executor import lowering_count
+from repro.core.lower import lower_pipelines
+
+from test_compile_api import TINY_APPS, mlp_graph, reduction_graph
+from benchmarks import apps
+
+
+def _outputs(graph, feeds, params, **opts):
+    app = repro.compile(graph, CompilerOptions(**opts))
+    return app, app.run(feeds, params).outputs
+
+
+def _assert_outputs_close(a, b, label, rtol=2e-3, atol=2e-3):
+    assert a.keys() == b.keys(), label
+    for k in a:
+        np.testing.assert_allclose(
+            np.asarray(a[k], np.float32), np.asarray(b[k], np.float32),
+            rtol=rtol, atol=atol, err_msg=f"{label}: differ on {k}")
+
+
+# --------------------------------------------------------------------------
+# which kernels match where
+# --------------------------------------------------------------------------
+
+class TestMatching:
+    def test_mlp_chain_lowers_to_fused_mlp(self):
+        app = repro.compile(mlp_graph(), mode="kitsune")
+        assert app.lowering is not None
+        assert app.lowering.kernels_used() == ["fused_mlp"]
+        (m,) = app.lowering.pipelines["sf0"].matches
+        assert m.ops == ("fc1", "act", "fc2") and m.out == "fc2"
+        assert m.meta["act"] == "gelu"
+
+    def test_nerf_lowers_multiple_mlp_stages(self):
+        app = repro.compile(apps.nerf(rays=4, samples=4), mode="kitsune")
+        matches = [m for p in app.lowering.pipelines.values()
+                   for m in p.matches if m.kernel == "fused_mlp"]
+        assert len(matches) >= 3  # fc0/act0/fc1, fc2/act2/fc3, fc5..., rgb...
+
+    def test_llama_lowers_attention_and_swiglu(self):
+        g = apps.llama3_8b(seq=4, batch=2, n_layers=1, d=16, ff=32,
+                           hq=2, hkv=2, hd=8, vocab=32)
+        app = repro.compile(g, mode="kitsune")
+        used = app.lowering.kernels_used()
+        assert "flash_attention" in used
+        assert "fused_mlp_swiglu" in used
+
+    def test_llama_decode_lowers_flash_decode(self):
+        g = apps.llama3_8b(seq=4, batch=2, n_layers=1, d=16, ff=32,
+                           hq=2, hkv=2, hd=8, vocab=32, decode=True)
+        app = repro.compile(g, mode="kitsune")
+        assert "flash_decode" in app.lowering.kernels_used()
+
+    def test_split_reduction_lowers_to_queue_reduce(self):
+        app = repro.compile(reduction_graph(), mode="kitsune")
+        assert "queue_reduce" in app.lowering.kernels_used()
+        (pl,) = app.lowering.pipelines.values()
+        (m,) = [m for m in pl.matches if m.kernel == "queue_reduce"]
+        assert m.ops == ("batch_sum.fanin", "batch_sum.final")
+
+    def test_backward_graph_multicast_is_plan_only(self):
+        tg = apps.synthesize_backward(apps.nerf(rays=4, samples=4))
+        app = repro.compile(tg, mode="kitsune")
+        bwd = [m for p in app.lowering.pipelines.values()
+               for m in p.matches if m.kernel == "fused_mlp_bwd"]
+        assert bwd, "no dX/dW multicast matched in the synthesized backward"
+        assert all(not m.executable for m in bwd)
+        # split gradient reductions also match queue_reduce
+        assert "queue_reduce" in app.lowering.kernels_used()
+
+    def test_fallback_reasons_recorded(self):
+        g = apps.graphcast(nodes=16, hidden=16, steps=1)
+        app = repro.compile(g, mode="kitsune")
+        reasons = [why for p in app.lowering.pipelines.values()
+                   for why in p.fallbacks.values()]
+        assert reasons, "graphcast has norm ops that cannot lower"
+        assert any("no kernel pattern" in r or "lone GEMM" in r
+                   for r in reasons)
+
+    def test_traced_nodes_fall_back_with_reason(self):
+        def f(x):
+            return jnp.tanh(x) * x
+
+        app = repro.compile(f, jnp.ones((8, 8), jnp.float32), mode="kitsune")
+        if app.lowering and app.lowering.pipelines:
+            reasons = [why for p in app.lowering.pipelines.values()
+                       for why in p.fallbacks.values()]
+            assert all(("opaque" in r) or ("no kernel" in r)
+                       or ("lone GEMM" in r) for r in reasons)
+
+
+# --------------------------------------------------------------------------
+# interpret-mode differential: lowered == bsp == vertical == unlowered
+# --------------------------------------------------------------------------
+
+class TestLoweredEquivalence:
+    @pytest.mark.parametrize("name", sorted(TINY_APPS))
+    def test_lowered_kitsune_matches_bsp_and_vertical(self, name):
+        g, feeds = TINY_APPS[name]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        app_k, out_k = _outputs(g, feeds, params, mode="kitsune")
+        _, out_b = _outputs(g, feeds, params, mode="bsp")
+        _, out_v = _outputs(g, feeds, params, mode="vertical")
+        _assert_outputs_close(out_b, out_k, f"{name}: bsp vs lowered-kitsune")
+        _assert_outputs_close(out_b, out_v, f"{name}: bsp vs vertical")
+
+    @pytest.mark.parametrize("name", ["nerf", "llama"])
+    def test_lowering_disabled_same_numerics(self, name):
+        g, feeds = TINY_APPS[name]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        app_on, out_on = _outputs(g, feeds, params, mode="kitsune")
+        app_off, out_off = _outputs(g, feeds, params, mode="kitsune",
+                                    disable=("lower_kernels",))
+        assert app_on.lowering is not None and app_on.lowering.n_matches()
+        assert app_off.lowering is None
+        _assert_outputs_close(out_off, out_on, f"{name}: lowering on vs off")
+
+    def test_queue_reduce_differential(self):
+        g = reduction_graph()
+        feeds = {"x": jax.random.normal(jax.random.PRNGKey(3), (64, 32, 16),
+                                        jnp.float32)}
+        app, out_k = _outputs(g, feeds, {}, mode="kitsune")
+        assert "queue_reduce" in app.lowering.kernels_used()
+        _, out_b = _outputs(g, feeds, {}, mode="bsp")
+        _assert_outputs_close(out_b, out_k, "reduction: bsp vs queue_reduce")
+
+    def test_zoo_sample_traced_model_stays_exact(self):
+        """A traced config-zoo architecture through the full pipeline with
+        lowering enabled: outputs must equal the raw jax function (traced
+        nodes fall back with reasons; nothing may silently change)."""
+        from repro.models import zoo
+        zf = zoo.build("gemma3-1b", batch=1, seq=8)
+        app = repro.compile(zf.fn, zf.example_inputs, mode="kitsune")
+        want = jax.tree_util.tree_leaves(zf.fn(*zf.example_inputs))
+        got = jax.tree_util.tree_leaves(app(*zf.example_inputs))
+        for w, g_ in zip(want, got):
+            np.testing.assert_allclose(np.asarray(w, np.float32),
+                                       np.asarray(g_, np.float32),
+                                       rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# hot-path contract with lowering enabled
+# --------------------------------------------------------------------------
+
+class TestZeroRelowering:
+    def test_second_run_zero_lowerings_lowered_app(self):
+        g, feeds = TINY_APPS["nerf"]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        app = repro.compile(g, mode="kitsune")
+        assert app.lowering.n_matches() >= 3
+        app.run(feeds, params)
+        before = lowering_count()
+        rep = app.run(feeds, params)
+        assert lowering_count() == before, "lowered hot path re-lowered"
+        assert rep.cache_misses == 0 and rep.cache_hits == rep.n_programs
+
+    def test_lowering_on_off_do_not_share_executables(self):
+        g, feeds = TINY_APPS["nerf"]()
+        params = repro.init_params(g, jax.random.PRNGKey(0))
+        on = repro.compile(g, mode="kitsune")
+        off = repro.compile(g, CompilerOptions(mode="kitsune",
+                                               disable=("lower_kernels",)))
+        on.run(feeds, params)
+        off.run(feeds, params)
+        assert not set(on.executables()) & set(off.executables())
+
+
+# --------------------------------------------------------------------------
+# describe() surface
+# --------------------------------------------------------------------------
+
+class TestDescribe:
+    def test_describe_shows_lowered_and_fallback(self):
+        g, _ = TINY_APPS["llama"]()
+        app = repro.compile(g, mode="kitsune")
+        text = app.describe()
+        assert "lower_kernels" in text
+        assert "lowered flash_attention" in text
+        assert "lowered fused_mlp_swiglu" in text
+        assert "fallback" in text          # wq/wk/wv lone GEMMs etc.
+        assert "kernel=" in text           # stage lines carry the kernel
+
+    def test_describe_plan_only_tag(self):
+        tg = apps.synthesize_backward(apps.nerf(rays=4, samples=4))
+        app = repro.compile(tg, mode="kitsune")
+        assert "(plan-only)" in app.describe()
+
+    def test_pass_summary_in_records(self):
+        app = repro.compile(mlp_graph(), mode="kitsune")
+        rec = {r.name: r for r in app.pass_records}
+        assert "kernel matches" in rec["lower_kernels"].summary
+
+
+# --------------------------------------------------------------------------
+# pass plumbing
+# --------------------------------------------------------------------------
+
+class TestPassPlumbing:
+    def test_lower_pipelines_direct(self):
+        g = mlp_graph()
+        plan = lower_pipelines(g, {"sf0": ["fc1", "act", "fc2"]})
+        assert plan.n_matches() == 1
+        assert plan.lowered_ops() == {"fc1", "act", "fc2"}
+        sig1 = plan.signature()
+        assert sig1 == lower_pipelines(
+            g, {"sf0": ["fc1", "act", "fc2"]}).signature()
+
+    def test_bias_blocks_mlp_match(self):
+        g = repro.Graph("biased")
+        g.input("x", (16, 8), "float32")
+        g.linear("fc1", "x", 32, bias=True)
+        g.elementwise("act", ["fc1"], "relu")
+        g.linear("fc2", "act", 8)
+        g.output("y", "fc2")
+        app = repro.compile(g, mode="kitsune")
+        assert app.lowering.n_matches() == 0
+        reasons = [why for p in app.lowering.pipelines.values()
+                   for why in p.fallbacks.values()]
+        assert any("bias" in r for r in reasons)
+
+    def test_non_kitsune_modes_skip_lowering(self):
+        """bsp/vertical never execute sf programs: the pass must not match
+        (describe() would otherwise claim kernels that never run)."""
+        for mode in ("bsp", "vertical"):
+            app = repro.compile(mlp_graph(), mode=mode)
+            assert app.lowering is None, mode
+            rec = {r.name: r for r in app.pass_records}
+            assert "skipped" in rec["lower_kernels"].summary
+            assert "lowered " not in app.describe()
+
+    def test_custom_pass_order_without_lowering_still_runs(self):
+        pm = repro.PassManager(("select", "split_reduction", "create_queues",
+                                "epilogue_fuse", "balance"))
+        app = repro.compile(mlp_graph(), pass_manager=pm)
+        assert app.lowering is None
+        x = jnp.ones((64, 32), jnp.float32)
+        params = repro.init_params(app.graph, jax.random.PRNGKey(0))
+        assert "y" in app.run({"x": x}, params).outputs
