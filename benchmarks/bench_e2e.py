@@ -132,6 +132,99 @@ def measured_e2e(csv=True, iters=10):
     return rows
 
 
+def _graph_train_step(g):
+    """A differentiable training step over a builder graph: replay the
+    forward with the executor's own node semantics (so the traced training
+    graph is the graph's real computation), mean-square loss over the
+    outputs, jax.grad w.r.t. every param leaf, SGD update.  This is what
+    `repro.compile(step, (params, feeds), donate_argnums=(0,))` turns into a
+    training ExecutionPlan."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.executor import _eval_node
+
+    def fwd(params, feeds):
+        vals = dict(feeds)
+        outs = []
+        for n in g.topo():
+            if n.kind in ("input", "const"):
+                continue
+            ins = [vals[i] for i in n.inputs]
+            vals[n.name] = _eval_node(n, ins, params.get(n.name))
+            if n.kind == "output":
+                outs.append(vals[n.name])
+        return sum(jnp.mean(jnp.square(o.astype(jnp.float32)))
+                   for o in outs)
+
+    def step(params, feeds):
+        loss, grads = jax.value_and_grad(fwd)(params, feeds)
+        new_params = jax.tree.map(
+            lambda p, g_: (p - 1e-3 * g_).astype(p.dtype), params, grads)
+        return new_params, loss
+
+    return step
+
+
+def measured_train_e2e(csv=True, iters=10):
+    """MEASURED training-step numbers on tiny instances of the five
+    challenge apps: per-step wall-clock and XLA-reported boundary traffic
+    for the FULL forward+backward+update step, kitsune vs bsp.
+
+    The step is traced through the capture front-end (the backward is a
+    real `jax.grad` jaxpr, not a synthesized graph) and executed from
+    training ExecutionPlans with the params argument DONATED (updated in
+    place, each iteration feeding back the previous step's params).  As in
+    `measured_e2e`, CPU wall-clock is dispatch+emulation; traffic reduction
+    and program counts are the hardware-portable signal."""
+    import time as _t
+
+    import jax
+
+    import repro
+    from repro.core.executor import init_params
+    from .apps import tiny_instances
+
+    rows = {}
+    for name, (g, feeds) in tiny_instances().items():
+        step = _graph_train_step(g)
+        row = {}
+        for label, opts in (("bsp", CompilerOptions(mode="bsp")),
+                            ("kitsune", CompilerOptions(mode="kitsune"))):
+            params = init_params(g, jax.random.PRNGKey(0))
+            app = repro.compile(step, (params, feeds), opts,
+                                donate_argnums=(0,))
+            # warm call: plan built, traffic read, params consumed+replaced
+            rep = app.run(app.traced.feeds(params, feeds))
+            params, loss = app.traced.unflatten_outputs(rep.outputs)
+            t0 = _t.perf_counter()
+            for _ in range(iters):
+                params, loss = app(params, feeds)
+            jax.block_until_ready(params)
+            row[label] = {
+                "us_per_step": (_t.perf_counter() - t0) / iters * 1e6,
+                "bytes": rep.bytes_accessed,
+                "programs": rep.n_programs,
+                "loss": float(loss),
+            }
+        row["traffic_reduction"] = 1.0 - (row["kitsune"]["bytes"]
+                                          / max(row["bsp"]["bytes"], 1.0))
+        row["wall_speedup_vs_bsp"] = (row["bsp"]["us_per_step"]
+                                      / max(row["kitsune"]["us_per_step"],
+                                            1e-9))
+        rows[name] = row
+        assert row["kitsune"]["bytes"] <= row["bsp"]["bytes"], name
+        assert abs(row["kitsune"]["loss"] - row["bsp"]["loss"]) < 1e-3, name
+        if csv:
+            print(f"e2e_train_measured_{name},"
+                  f"{row['kitsune']['us_per_step']:.0f},"
+                  f"bsp_us={row['bsp']['us_per_step']:.0f}"
+                  f";traffic_red={row['traffic_reduction']:.2f}"
+                  f";programs={row['kitsune']['programs']}"
+                  f"/{row['bsp']['programs']}")
+    return rows
+
+
 def main(csv=True, zoo=None):
     inf, tr = [], []
     for name, make in APPS.items():
@@ -169,7 +262,13 @@ if __name__ == "__main__":
     ap.add_argument("--measured", action="store_true",
                     help="also run the MEASURED wall-clock/traffic axis on "
                          "tiny executable instances (lowering on/off)")
+    ap.add_argument("--train", action="store_true",
+                    help="also run the MEASURED training axis: full "
+                         "fwd+bwd+update steps through training "
+                         "ExecutionPlans, kitsune vs bsp")
     a = ap.parse_args()
     main(zoo=a.zoo)
     if a.measured:
         measured_e2e()
+    if a.train:
+        measured_train_e2e()

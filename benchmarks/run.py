@@ -35,8 +35,12 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
                 1 - kit.dram_bytes / max(bsp.dram_bytes, 1)}
     dispatch = bench_dispatch.main(csv=False, iters=200)
     apps_measured = bench_e2e.measured_e2e(csv=False, iters=5)
+    # training axis: full fwd+bwd+update steps through training
+    # ExecutionPlans (params donated), measured kitsune-vs-bsp wall-clock
+    # and XLA boundary traffic (see EXPERIMENTS.md for the schema)
+    apps_train = bench_e2e.measured_train_e2e(csv=False, iters=5)
     results = {
-        "schema": 1,
+        "schema": 2,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -44,15 +48,18 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "apps_coverage": {
             name: r["inference"] for name, r in apps_cov.items()},
         "apps_measured": apps_measured,
+        "apps_train_measured": apps_train,
         "zoo_e2e": zoo_e2e,
         "zoo_coverage": zoo_cov,
         "dispatch_overhead": dispatch,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
+    train_red = {n: round(r["traffic_reduction"], 2)
+                 for n, r in apps_train.items()}
     print(f"# smoke results -> {out_path} "
           f"(e2e geomean inf={gm_i:.2f} train={gm_t:.2f}, "
-          f"zoo={list(zoo_e2e)}, "
+          f"zoo={list(zoo_e2e)}, train_traffic_red={train_red}, "
           f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x)")
     return results
 

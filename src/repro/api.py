@@ -7,10 +7,14 @@
     report = app.run(feeds, params)
 
 `compile()` runs the staged pass pipeline (select -> split_reduction ->
-create_queues -> epilogue_fuse -> balance) and returns a CompiledApp whose
-XLA executables are cached process-wide -- repeated runs with same-shaped
-feeds perform zero new lowerings.  The same cache backs `cached_jit`, the
-entrypoint the serving/launch stacks use for non-graph jax callables.
+create_queues -> epilogue_fuse -> lower_kernels -> balance) and returns a
+CompiledApp whose XLA executables are cached process-wide -- repeated runs
+with same-shaped feeds perform zero new lowerings.  The same cache backs
+`cached_jit`, the entrypoint the serving/launch stacks use for non-graph
+jax callables.  Callables are traced as pass 0 (`repro.compile(fn,
+example_inputs)`); `donate_argnums` marks arguments to update in place
+(the training-step path), and `atomic`/`atomic_vjp` register sub-jaxprs
+that survive capture as single (kernel-lowerable) nodes.
 """
 from .core.compiler import (CachedFunction, CompiledApp, CompilerOptions,
                             CompileState, PassManager, PassRecord, TracedApp,
@@ -19,7 +23,7 @@ from .core.executor import (ExecutionReport, GraphExecutor,
                             clear_executable_cache, executable_cache,
                             init_params, lowering_count)
 from .core.graph import Graph, Node, TensorSpec, graph_fingerprint
-from .core.trace import TracedFunction, atomic, trace
+from .core.trace import TracedFunction, atomic, atomic_vjp, trace
 
 __all__ = [
     "compile", "CompilerOptions", "CompiledApp", "CompileState",
@@ -27,5 +31,5 @@ __all__ = [
     "ExecutionReport", "GraphExecutor", "init_params",
     "executable_cache", "clear_executable_cache", "lowering_count",
     "Graph", "Node", "TensorSpec", "graph_fingerprint",
-    "trace", "TracedFunction", "TracedApp", "atomic",
+    "trace", "TracedFunction", "TracedApp", "atomic", "atomic_vjp",
 ]

@@ -350,11 +350,13 @@ class CompiledApp:
     graph+options) reuse the same compiled objects."""
 
     def __init__(self, graph: Graph, options: CompilerOptions,
-                 state: CompileState, pass_records: list[PassRecord]):
+                 state: CompileState, pass_records: list[PassRecord],
+                 donate_feeds: frozenset[str] = frozenset()):
         self.graph = graph
         self.options = options
         self.state = state
         self.pass_records = pass_records
+        self.donate_feeds = frozenset(donate_feeds)
         self.selection = state.selection
         self.pipelined = state.pipelined
         self.lowering = state.lowering
@@ -377,7 +379,8 @@ class CompiledApp:
         backend = make_backend(options.mode, exec_graph, sf_members,
                                lowering)
         self._engine = Engine(backend,
-                              (self.fingerprint, options.cache_key()))
+                              (self.fingerprint, options.cache_key()),
+                              donate_feeds=self.donate_feeds)
 
     # -- execution --------------------------------------------------------
     def run(self, feeds: dict[str, jax.Array], params: dict | None = None,
@@ -458,9 +461,11 @@ class TracedApp(CompiledApp):
     params dict."""
 
     def __init__(self, traced: TracedFunction, options: CompilerOptions,
-                 state: CompileState, pass_records: list[PassRecord]):
+                 state: CompileState, pass_records: list[PassRecord],
+                 donate_feeds: frozenset[str] = frozenset()):
         self.traced = traced
-        super().__init__(traced.graph, options, state, pass_records)
+        super().__init__(traced.graph, options, state, pass_records,
+                         donate_feeds)
 
     def __call__(self, *args):
         report = self.run(self.traced.feeds(*args))
@@ -486,6 +491,8 @@ def compile(graph: Graph | Callable, *args,
             options: CompilerOptions | None = None,
             example_inputs: tuple | None = None,
             pass_manager: PassManager | None = None,
+            donate_argnums: tuple[int, ...] = (),
+            donate_feeds: tuple[str, ...] = (),
             **option_overrides) -> CompiledApp:
     """Compile an operator graph OR any jax callable into a CompiledApp.
 
@@ -496,7 +503,15 @@ def compile(graph: Graph | Callable, *args,
     `jax.make_jaxpr` -- tracing is pass 0 of the pipeline -- and returns a
     TracedApp that is itself callable like `fn`.  `example_inputs` is the
     tuple of positional example arguments (a single array may be passed
-    bare)."""
+    bare).
+
+    Donation: `donate_argnums` (callable path) marks positional arguments
+    whose buffers the compiled app may reuse once they are dead -- the
+    training step donates its (state,) argument so parameter and optimizer
+    buffers update in place instead of doubling resident memory.  As with
+    `jax.jit`, a donated argument's arrays are CONSUMED by the call; pass
+    fresh arrays (e.g. the previous call's outputs) each time.
+    `donate_feeds` is the graph-path equivalent, naming feed keys directly."""
     for a in args:
         if isinstance(a, CompilerOptions):
             if options is not None:
@@ -521,17 +536,37 @@ def compile(graph: Graph | Callable, *args,
         rec = PassRecord("trace", time.perf_counter() - t0, False,
                          f"{len(traced.graph.nodes)} nodes, "
                          f"{len(traced.consts)} consts")
+        donate = set(donate_feeds)
+        if donate_argnums:
+            # map argument positions to the traced input names their
+            # flattened leaves occupy (in_names is leaf-ordered)
+            spans, start = [], 0
+            for a in example_inputs:
+                n = len(jax.tree_util.tree_flatten(a)[0])
+                spans.append((start, start + n))
+                start += n
+            for i in donate_argnums:
+                if not 0 <= i < len(spans):
+                    raise ValueError(f"donate_argnums {i} out of range for "
+                                     f"{len(spans)} example inputs")
+                lo, hi = spans[i]
+                donate.update(traced.in_names[lo:hi])
         state = CompileState(traced.graph)
         records = [rec] + pm.run(state, options)
         _ensure_pipelined(state, options)
-        return TracedApp(traced, options, state, records)
+        return TracedApp(traced, options, state, records,
+                         frozenset(donate))
     if example_inputs is not None:
         raise TypeError("example_inputs is only valid when compiling a "
                         "callable")
+    if donate_argnums:
+        raise TypeError("donate_argnums is only valid when compiling a "
+                        "callable (use donate_feeds for graphs)")
     state = CompileState(graph)
     records = pm.run(state, options)
     _ensure_pipelined(state, options)
-    return CompiledApp(graph, options, state, records)
+    return CompiledApp(graph, options, state, records,
+                       frozenset(donate_feeds))
 
 
 # ---------------------------------------------------------------------------

@@ -642,11 +642,17 @@ class Engine:
     MAX_PLANS = 64
 
     def __init__(self, backend: ExecutorBackend, engine_key: tuple,
-                 cache: ExecutableCache | None = None):
+                 cache: ExecutableCache | None = None,
+                 donate_feeds: frozenset[str] | set[str] = frozenset()):
         self.backend = backend
         self.graph = backend.graph
         self.programs = backend.plan()
+        self.donate_feeds = frozenset(donate_feeds)
         self.engine_key = (engine_key,) + backend.key()
+        if self.donate_feeds:
+            # donating engines must never share executables with
+            # non-donating ones (the donated parameter positions differ)
+            self.engine_key += (("donate",) + tuple(sorted(self.donate_feeds)),)
         self.cache = cache if cache is not None else _CACHE
         self._plans: OrderedDict[tuple, ExecutionPlan] = OrderedDict()
         self._build_skeleton()
@@ -694,14 +700,18 @@ class Engine:
                 continue
             # donate a position iff the value dies here, was produced by an
             # earlier executable (fresh XLA buffer -- feeds/consts belong to
-            # the caller, free-op results may be views), no free op ever
+            # the caller, free-op results may be views) OR is a feed the
+            # caller DECLARED donatable (donate_feeds: training threads
+            # optimizer/param state in place this way), no free op ever
             # reads it (views would share the donated buffer), and the name
             # is not passed at two positions (duplicated inputs like
             # mul(a, a) would donate one buffer twice)
             donate = tuple(
                 p for p, nm in enumerate(prog.needs)
-                if (last_use.get(nm) == idx and nm in exe_produced
-                    and nm not in read_by_free and nm not in feed_names
+                if (last_use.get(nm) == idx
+                    and ((nm in exe_produced and nm not in feed_names)
+                         or (nm in self.donate_feeds and nm in feed_names))
+                    and nm not in read_by_free
                     and prog.needs.count(nm) == 1))
             out_slots = tuple(slot(nm) for nm in prog.outs)
             steps.append(_StepSpec(prog, in_slots, out_slots, donate, release))
@@ -748,6 +758,14 @@ class Engine:
         total_bytes = total_temp = 0.0
         n_programs = hits = misses = 0
         donate_ok = _donation_supported()
+        # feed buffers aliased under TWO names (e.g. tied state leaves) are
+        # never donated: donating one name invalidates the other's reads
+        donated_ids: set[int] = set()
+        if self.donate_feeds:
+            seen_ids: set[int] = set()
+            for _, name in self._feed_slots:
+                i = id(feeds[name])
+                (donated_ids if i in seen_ids else seen_ids).add(i)
         for spec in self._steps:
             if type(spec) is _FreeSpec:
                 buf[spec.out_slot] = _eval_node(
@@ -758,14 +776,35 @@ class Engine:
                 pkeys = tuple(k for k in prog.params if k in params)
                 psub = {k: params[k] for k in pkeys}
                 ins = tuple(buf[i] for i in spec.in_slots)
+                donate = spec.donate if donate_ok else ()
+                if donate and self.donate_feeds:
+                    # two DECLARED feed names may alias ONE buffer (e.g.
+                    # tied state leaves): donating it at both positions is
+                    # an XLA runtime error, so only the first position seen
+                    # this call keeps its donation.  The check covers feed
+                    # buffers only -- the feeds dict keeps them alive for
+                    # the whole call, so their ids are stable (intermediate
+                    # buffers are released mid-run and id() reuse would make
+                    # the decision, and the cache keys, nondeterministic).
+                    # The plan bakes this in; later calls must alias at most
+                    # as much as the plan-building call (feeding each call
+                    # the previous call's outputs satisfies this).
+                    keep = []
+                    for p in donate:
+                        if prog.needs[p] in self.donate_feeds:
+                            i = id(ins[p])
+                            if i in donated_ids:
+                                continue
+                            donated_ids.add(i)
+                        keep.append(p)
+                    donate = tuple(keep)
                 ckey = self.engine_key + (
-                    "plan", prog.name, spec.donate if donate_ok else (),
+                    "plan", prog.name, donate,
                     _plan_key(ins), _plan_key(psub))
                 before = self.cache.misses
                 exe = self.cache.get_or_build(
                     ckey, lambda: self._build_positional(
-                        prog, ins, psub,
-                        spec.donate if donate_ok else ()))
+                        prog, ins, psub, donate))
                 if self.cache.misses > before:
                     misses += 1
                 else:

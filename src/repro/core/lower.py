@@ -17,6 +17,14 @@ member ops (post split-reduction, post epilogue-fusion) onto the kernels:
   * dX/dW multicast GEMMs in synthesized backward graphs -> fused_mlp_bwd
     (plan-only: those graphs are cost-model artifacts and carry no weights,
     so the match is recorded for analysis but never executed)
+  * HINTED atomics in traced training graphs (core/trace.py `atomic_vjp`
+    with `lower=` hints, installed by models/atoms.py during training
+    capture) -> EXECUTABLE kernel calls: fused_mlp / fused_mlp_swiglu
+    forward and fused_mlp_bwd (two-matrix and gated) backward.  The atomic
+    registry pins those nodes' semantics, so opacity of the eval closure is
+    not a bar -- this is how the backward of a real `jax.grad` training
+    step runs the Fig 2(c) multicast kernels instead of replaying autodiff
+    closures.
 
 Every match is EXACT: a chain is only lowered when its intermediate values
 are single-consumer-internal and the member ops' semantics are fully known
@@ -163,6 +171,45 @@ def _attention_call(node: Node, decode: bool) -> Callable:
     return call
 
 
+def _atomic_mlp_fwd_call(inputs: list[str], act: str) -> Callable:
+    x, w1, w2 = inputs
+
+    def call(vals, params):
+        from repro.kernels import mlp
+        return mlp(vals[x], vals[w1], vals[w2], act=act, cfg=_kernel_cfg())
+    return call
+
+
+def _atomic_swiglu_fwd_call(inputs: list[str], act: str) -> Callable:
+    x, wg, wu, wd = inputs
+
+    def call(vals, params):
+        from repro.kernels import mlp_swiglu
+        return mlp_swiglu(vals[x], vals[wg], vals[wu], vals[wd], act=act,
+                          cfg=_kernel_cfg())
+    return call
+
+
+def _atomic_mlp_bwd_call(inputs: list[str], act: str) -> Callable:
+    x, w1, w2, dy = inputs
+
+    def call(vals, params):
+        from repro.kernels import mlp_bwd
+        return mlp_bwd(vals[x], vals[w1], vals[w2], vals[dy], act=act,
+                       cfg=_kernel_cfg())
+    return call
+
+
+def _atomic_swiglu_bwd_call(inputs: list[str], act: str) -> Callable:
+    x, wg, wu, wd, dy = inputs
+
+    def call(vals, params):
+        from repro.kernels import mlp_swiglu_bwd
+        return mlp_swiglu_bwd(vals[x], vals[wg], vals[wu], vals[wd],
+                              vals[dy], act=act, cfg=_kernel_cfg())
+    return call
+
+
 def _queue_reduce_call(partial: Node) -> Callable:
     x_name = partial.inputs[0]
 
@@ -185,6 +232,61 @@ def _queue_reduce_call(partial: Node) -> Callable:
 # ---------------------------------------------------------------------------
 # matchers
 # ---------------------------------------------------------------------------
+
+# lower_hint family -> (kernel label, #inputs, call factory, extra meta)
+_HINTED_KERNELS: dict[str, tuple] = {
+    "mlp_fwd": ("fused_mlp", 3, _atomic_mlp_fwd_call, {}),
+    "swiglu_fwd": ("fused_mlp_swiglu", 4, _atomic_swiglu_fwd_call, {}),
+    "mlp_bwd": ("fused_mlp_bwd", 4, _atomic_mlp_bwd_call, {}),
+    "swiglu_bwd": ("fused_mlp_bwd", 5, _atomic_swiglu_bwd_call,
+                   {"gated": True}),
+}
+
+
+def _try_hinted_atomic(g: Graph, n: Node, mset: set[str], taken: set[str],
+                       note: Callable) -> KernelMatch | None:
+    """Atomic nodes whose registry entry carries a kernel-lowering hint
+    (core/trace.py `atomic(..., lower=...)` / `atomic_vjp`).  The hint pins
+    the node's semantics, so opacity of the eval closure is NOT a bar: this
+    is how traced training graphs get EXECUTABLE fused_mlp_bwd matches
+    instead of the plan-only dX/dW analysis of synthesized backwards."""
+    hint = n.attrs.get("lower_hint")
+    if not hint:
+        return None
+    family, *opts = hint
+    meta = dict(tuple(kv) for kv in opts)
+    if family in ("attention_fwd", "attention_bwd"):
+        # the training atomics keep attention single-node; the backward runs
+        # the recompute closure (chunked online-softmax + vjp) and the
+        # forward's window arrives as a runtime operand -- both stay on the
+        # jnp path for now (ROADMAP: attention-backward kernel)
+        note(n.name, "atomic attention: recompute/jnp closure path "
+                     "(window is a runtime operand; no backward kernel yet)")
+        return None
+    spec = _HINTED_KERNELS.get(family)
+    if spec is None:
+        note(n.name, f"unknown lower hint {family!r}")
+        return None
+    kernel, n_in, factory, extra = spec
+    if len(n.inputs) != n_in:
+        note(n.name, f"{kernel}: expected {n_in} operands, "
+                     f"got {len(n.inputs)}")
+        return None
+    act = meta.get("act", "identity")
+    if act not in _LOWERABLE_ACTS:
+        note(n.name, f"{kernel}: act {act!r} has no kernel implementation")
+        return None
+    if len(g.nodes[n.inputs[0]].out.shape) < 2:
+        note(n.name, f"{kernel}: input rank < 2")
+        return None
+    call = factory(list(n.inputs), act)
+    if "n_outs" in n.attrs and family.endswith("_fwd"):
+        # atomic pjit nodes are tuple-valued (projections index them): the
+        # kernel call must honor the same convention as the eval closure
+        fwd_call = call
+        call = lambda vals, params: (fwd_call(vals, params),)
+    return KernelMatch(kernel, (n.name,), n.name, {**meta, **extra},
+                       _call=call)
 
 def _is_opaque(n: Node) -> bool:
     return "_eval" in n.attrs
@@ -319,8 +421,8 @@ def _try_mlp_bwd(g: Graph, n: Node, mset: set[str], taken: set[str],
                        {"multicast": dname}, executable=False)
 
 
-_MATCHERS = (_try_attention, _try_queue_reduce, _try_swiglu, _try_mlp,
-             _try_mlp_bwd)
+_MATCHERS = (_try_hinted_atomic, _try_attention, _try_queue_reduce,
+             _try_swiglu, _try_mlp, _try_mlp_bwd)
 
 
 def lower_pipeline(g: Graph, sf_name: str, members: list[str],

@@ -27,6 +27,17 @@ _CODE = {
     "reduce": "R", "reduce_partial": "R", "reduce_final": "R",
 }
 
+
+def _node_code(n: Node) -> str:
+    # Kernel-hinted atomics (core/trace.py `atomic(..., lower=...)`) are
+    # already fused dataflow blocks internally (e.g. the Fig-2c multicast
+    # backward is five GEMMs in one node), so they anchor sf-nodes on their
+    # own: code "K" + the `hinted_kernel` pattern.  Attention atomics keep
+    # their "A" so the attention pipeline patterns still see them.
+    if "lower_hint" in n.attrs and n.kind != "attention":
+        return "K"
+    return _CODE.get(n.kind, "?")
+
 # Pattern library: regexes over the op-code string of a candidate segment.
 # These express the paper's Fig-2 motifs plus attention / norm chains; adding
 # a new pattern is one line (paper: "Adding new patterns is a trivial task").
@@ -44,6 +55,10 @@ PATTERN_LIBRARY: dict[str, str] = {
     "softmax_chain": r"LS[EL]*",
     # pure streaming chain of cheap ops (profitable: removes HBM round trips)
     "ew_chain": r"[NES]{2,}",
+    # kernel-hinted atomic (fused MLP fwd/bwd from training traces): the
+    # node itself is a dataflow pipeline, so any run containing one is
+    # selected -- the lower_kernels pass then binds it to its Pallas kernel
+    "hinted_kernel": r"K",
 }
 
 
@@ -74,7 +89,7 @@ class Selection:
 
 
 def _codes(nodes: list[Node]) -> str:
-    return "".join(_CODE.get(n.kind, "?") for n in nodes)
+    return "".join(_node_code(n) for n in nodes)
 
 
 def _match_patterns(code: str, library: dict[str, str]) -> list[str]:

@@ -32,7 +32,9 @@ Import rules:
     bigger than `max_unroll_eqns` stay opaque single nodes
   * multi-output primitives      -> one tuple-valued node + free projections
   * pjit of a registered atomic (see `atomic()`) -> ONE node of the
-    registered kind (e.g. fused attention), flops from the registry
+    registered kind (e.g. fused attention), flops from the registry;
+    `atomic_vjp()` registers a custom-vjp PAIR so `jax.grad` traces keep
+    both the forward and the backward as single (kernel-lowerable) nodes
   * other pjit / custom_jvp / custom_vjp / remat -> inlined
 """
 from __future__ import annotations
@@ -97,6 +99,11 @@ _INLINE_PRIMS = {"pjit", "closed_call", "core_call", "xla_call",
 class AtomicSpec:
     kind: str
     flops: Callable[[list, list], float] | None = None  # (in_avals, out_avals)
+    # Optional kernel-lowering hint consumed by core/lower.py: a stable
+    # nested tuple, e.g. ("mlp_bwd", ("act", "gelu")).  The hint pins the
+    # node's semantics for the matcher (the atomic registry is the source of
+    # truth), so lowering does not need to reverse-engineer the sub-jaxpr.
+    lower: tuple | None = None
 
 
 _ATOMICS: dict[str, AtomicSpec] = {}
@@ -105,18 +112,26 @@ _ATOMIC_PREFIX = "repro.atomic"
 
 def atomic(fn: Callable, kind: str, *,
            flops: Callable[[list, list], float] | None = None,
-           static_argnames: Sequence[str] = ()) -> Callable:
+           static_argnames: Sequence[str] = (),
+           lower: tuple | None = None,
+           name: str | None = None) -> Callable:
     """Wrap `fn` so the tracer imports any call to it as ONE node of `kind`.
 
     The wrapper jits `fn` under a marker name; when the tracer meets the
     resulting pjit eqn it emits a single graph node (resource class and
     pattern code of `kind`) whose eval closure runs the whole sub-jaxpr --
     this is how fused attention stays one "attention" op instead of
-    dissolving into its einsum/softmax soup."""
+    dissolving into its einsum/softmax soup.
+
+    `lower` tags the node with a kernel-lowering hint (`attrs["lower_hint"]`)
+    that core/lower.py matches onto a real Pallas kernel -- the hint must
+    fully determine the kernel call's static config (the tracer bakes it into
+    the fingerprint attrs, so differently-hinted atomics never share
+    executables)."""
     if kind not in ("attention", "matmul", "elementwise", "reduce", "norm",
                     "softmax", "conv", "gather"):
         raise ValueError(f"unsupported atomic kind {kind!r}")
-    stem = getattr(fn, "__name__", "fn")
+    stem = name or getattr(fn, "__name__", "fn")
     marker = f"{_ATOMIC_PREFIX}[{kind}].{stem}"
 
     def _marked(*args, **kwargs):
@@ -124,8 +139,66 @@ def atomic(fn: Callable, kind: str, *,
 
     _marked.__name__ = marker
     _marked.__qualname__ = marker
-    _ATOMICS[marker] = AtomicSpec(kind, flops)
+    _ATOMICS[marker] = AtomicSpec(kind, flops, lower)
     return jax.jit(_marked, static_argnames=tuple(static_argnames))
+
+
+def _zero_cotangent(x):
+    """Symbolic-zero gradient for a non-differentiable primal (float0 for
+    integer operands, per the custom_vjp contract)."""
+    if jnp.issubdtype(jnp.result_type(x), jnp.integer):
+        return np.zeros(jnp.shape(x), jax.dtypes.float0)
+    return jnp.zeros_like(x)
+
+
+def atomic_vjp(fn: Callable, bwd: Callable, kind: str, *,
+               bwd_kind: str | None = None,
+               n_diff: int | None = None,
+               flops: Callable[[list, list], float] | None = None,
+               bwd_flops: Callable[[list, list], float] | None = None,
+               lower: tuple | None = None,
+               bwd_lower: tuple | None = None,
+               name: str | None = None) -> Callable:
+    """A differentiable atomic: BOTH directions stay single nodes.
+
+    `fn(*primals)` is the forward; `bwd(*primals, cotangent)` returns the
+    tuple of gradients for the first `n_diff` primals (default: all).  Each
+    side is wrapped as its own marked atomic, glued together with
+    `jax.custom_vjp`, so `jax.grad` through the wrapper produces a jaxpr in
+    which the forward imports as one `kind` node and the backward as one
+    `bwd_kind` node -- the custom-vjp boundary the training trace needs so
+    backward MLP/attention blocks survive capture as recognizable (and
+    kernel-lowerable) units instead of dissolving into autodiff soup.
+
+    Primals past `n_diff` (e.g. a runtime attention-window operand) get
+    zero cotangents appended OUTSIDE the atomic -- float0 for integer
+    operands, which must never enter the graph IR.
+
+    All arguments must be arrays (pre-bind statics with functools.partial;
+    encode them in `name`/`lower` so distinct configs get distinct markers)."""
+    stem = name or getattr(fn, "__name__", "fn")
+    fwd_m = atomic(fn, kind, flops=flops, lower=lower, name=stem)
+    bwd_m = atomic(bwd, bwd_kind or kind, flops=bwd_flops, lower=bwd_lower,
+                   name=f"{stem}_bwd")
+
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fwd_m(*args)
+
+    def fwd_rule(*args):
+        return fwd_m(*args), args
+
+    def bwd_rule(res, dy):
+        out = bwd_m(*res, dy)
+        grads = tuple(out) if isinstance(out, (tuple, list)) else (out,)
+        if n_diff is not None:
+            grads = grads[:n_diff] + tuple(
+                _zero_cotangent(x) for x in res[n_diff:])
+        return grads
+
+    wrapped.defvjp(fwd_rule, bwd_rule)
+    wrapped.__name__ = stem
+    return wrapped
 
 
 def attention_flops(in_avals: list, out_avals: list) -> float:
@@ -491,9 +564,11 @@ class _Importer:
         out_avals = [v.aval for v in eqn.outvars]
         est = spec.flops or (lambda i, o: jaxpr_flops(
             self._inner_jaxpr(eqn.params).jaxpr))
+        attrs = {"atomic": eqn.params.get("name", "")}
+        if spec.lower is not None:
+            attrs["lower_hint"] = spec.lower
         self._emit(eqn, env, kind=spec.kind,
-                   flops=float(est(in_avals, out_avals)),
-                   attrs={"atomic": eqn.params.get("name", "")})
+                   flops=float(est(in_avals, out_avals)), attrs=attrs)
 
     def _opaque(self, eqn, env) -> None:
         """Control-flow (or oversized scan) kept as one exact node."""

@@ -3,9 +3,9 @@
 Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
 models consume ops.py so one KernelConfig flag flips the implementation.
 """
-from .ops import (KernelConfig, attention, decode_attention, mlp, mlp_swiglu,
-                  reduce)
+from .ops import (KernelConfig, attention, decode_attention, mlp, mlp_bwd,
+                  mlp_swiglu, mlp_swiglu_bwd, reduce)
 from .flash_attention import combine_partials
 
-__all__ = ["KernelConfig", "attention", "decode_attention", "mlp",
-           "mlp_swiglu", "reduce", "combine_partials"]
+__all__ = ["KernelConfig", "attention", "decode_attention", "mlp", "mlp_bwd",
+           "mlp_swiglu", "mlp_swiglu_bwd", "reduce", "combine_partials"]

@@ -29,34 +29,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# d/dx act(x): ONE derivative table shared with the jnp oracles (ref.py)
+from .ref import _DACTS, _dgelu
+
 _ACTS = {
     "gelu": jax.nn.gelu,
     "relu": lambda x: jnp.maximum(x, 0.0),
     "silu": jax.nn.silu,
     "identity": lambda x: x,
-}
-
-_SQRT_2_OVER_PI = 0.7978845608028654
-_GELU_C = 0.044715
-
-
-def _dgelu(x):
-    """Closed-form derivative of the tanh-approximated gelu (the default
-    `jax.nn.gelu`): 0.5(1+tanh u) + 0.5 x sech^2(u) u', with
-    u = sqrt(2/pi)(x + 0.044715 x^3).  Replaces a per-element
-    `vmap(grad(gelu))` that was catastrophically slow to trace and run;
-    differential-tested against `jax.grad` in tests/test_kernels.py."""
-    u = _SQRT_2_OVER_PI * (x + _GELU_C * x * x * x)
-    t = jnp.tanh(u)
-    du = _SQRT_2_OVER_PI * (1.0 + 3.0 * _GELU_C * x * x)
-    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
-
-
-_DACTS = {  # d/dx act(x)
-    "relu": lambda x: (x > 0).astype(x.dtype),
-    "identity": lambda x: jnp.ones_like(x),
-    "gelu": _dgelu,
-    "silu": lambda x: jax.nn.sigmoid(x) * (1 + x * (1 - jax.nn.sigmoid(x))),
 }
 
 
@@ -203,6 +183,121 @@ def _bwd_dw_kernel(x_ref, w1_ref, w2_ref, dy_ref, dw1_ref, dw2_ref,
     def _done():
         dw1_ref[...] = a1_ref[...].astype(dw1_ref.dtype)
         dw2_ref[...] = a2_ref[...].astype(dw2_ref.dtype)
+
+
+def _bwd_dx_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, dy_ref, dx_ref,
+                          acc_ref, *, act: str, n_h: int):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # recompute the gate/up tiles (queue recompute beats HBM spill)
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    dt = jnp.dot(dy_ref[...], wd_ref[...].T, preferred_element_type=jnp.float32)
+    dg = dt * u * _DACTS[act](g)
+    du = dt * _ACTS[act](g)
+    acc_ref[...] += jnp.dot(dg.astype(x.dtype), wg_ref[...].T,
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(du.astype(x.dtype), wu_ref[...].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(h == n_h - 1)
+    def _done():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _bwd_dw_kernel_swiglu(x_ref, wg_ref, wu_ref, wd_ref, dy_ref,
+                          dwg_ref, dwu_ref, dwd_ref, ag_ref, au_ref, ad_ref,
+                          *, act: str, n_m: int):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        ag_ref[...] = jnp.zeros_like(ag_ref)
+        au_ref[...] = jnp.zeros_like(au_ref)
+        ad_ref[...] = jnp.zeros_like(ad_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    sg = _ACTS[act](g)
+    t = sg * u
+    dy = dy_ref[...]
+    # multicast: ONE staged tile set (t, dg, du) feeds all three weight-grad
+    # GEMMs -- the Fig 2(c) pattern, gated variant
+    ad_ref[...] += jnp.dot(t.astype(x.dtype).T, dy,
+                           preferred_element_type=jnp.float32)
+    dt = jnp.dot(dy, wd_ref[...].T, preferred_element_type=jnp.float32)
+    dg = dt * u * _DACTS[act](g)
+    du = dt * sg
+    ag_ref[...] += jnp.dot(x.T, dg.astype(x.dtype),
+                           preferred_element_type=jnp.float32)
+    au_ref[...] += jnp.dot(x.T, du.astype(x.dtype),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(m == n_m - 1)
+    def _done():
+        dwg_ref[...] = ag_ref[...].astype(dwg_ref.dtype)
+        dwu_ref[...] = au_ref[...].astype(dwu_ref.dtype)
+        dwd_ref[...] = ad_ref[...].astype(dwd_ref.dtype)
+
+
+def fused_mlp_swiglu_bwd(x, wg, wu, wd, dy, *, act: str = "silu",
+                         block_m: int = 128, block_h: int = 512,
+                         interpret: bool = False):
+    """Backward of (act(x@wg) * (x@wu)) @ wd -- the gated variant of the
+    Fig 2(c) multicast: recomputed gate/up tiles feed the dX GEMM pair and
+    all three weight-grad GEMMs without the (M, H) tensors touching HBM."""
+    m, d_in = x.shape
+    _, hdim = wg.shape
+    d_out = wd.shape[1]
+    n_m, n_h = m // block_m, hdim // block_h
+    dx = pl.pallas_call(
+        functools.partial(_bwd_dx_kernel_swiglu, act=act, n_h=n_h),
+        grid=(n_m, n_h),
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((d_in, block_h), lambda i, h: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda i, h: (h, 0)),
+            pl.BlockSpec((block_m, d_out), lambda i, h: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d_in), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_in), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d_in), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd, dy)
+    dwg, dwu, dwd = pl.pallas_call(
+        functools.partial(_bwd_dw_kernel_swiglu, act=act, n_m=n_m),
+        grid=(n_h, n_m),  # m innermost: dW accumulation is grid-consecutive
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda h, i: (i, 0)),
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda h, i: (h, 0)),
+            pl.BlockSpec((block_m, d_out), lambda h, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((d_in, block_h), lambda h, i: (0, h)),
+            pl.BlockSpec((block_h, d_out), lambda h, i: (h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((d_in, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((hdim, d_out), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_in, block_h), jnp.float32),
+                        pltpu.VMEM((d_in, block_h), jnp.float32),
+                        pltpu.VMEM((block_h, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd, dy)
+    return (dx, dwg.astype(wg.dtype), dwu.astype(wu.dtype),
+            dwd.astype(wd.dtype))
 
 
 def fused_mlp_bwd(x, w1, w2, dy, *, act: str = "gelu", block_m: int = 128,

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import combine_partials, flash_attention, flash_decode
-from .fused_mlp import fused_mlp_bwd, fused_mlp_fwd, fused_mlp_swiglu_fwd
+from .fused_mlp import (fused_mlp_bwd, fused_mlp_fwd, fused_mlp_swiglu_bwd,
+                        fused_mlp_swiglu_fwd)
 from .queue_reduce import queue_reduce
 
 
@@ -40,6 +41,16 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, padw), pad
 
 
+def _blocks(m: int, hdim: int, cfg: KernelConfig) -> tuple[int, int]:
+    """Kernel tilings that exactly divide small/CPU shapes: block_m falls
+    back to 1, block_h to the full hidden dim.  The ONE tiling rule for
+    every fused-MLP wrapper, forward and backward -- the two directions must
+    always pick the same tiles for the same shapes."""
+    bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
+    bh = cfg.block_h if hdim % cfg.block_h == 0 else hdim
+    return bm, bh
+
+
 # ---------------------------------------------------------------------------
 # fused MLP with dataflow backward
 # ---------------------------------------------------------------------------
@@ -51,8 +62,7 @@ def _fused_mlp(x, w1, w2, _dummy, act: str, cfg: KernelConfig):
 
 def _fused_mlp_fwd_impl(x, w1, w2, act, cfg):
     m, d_in = x.shape
-    bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
-    bh = cfg.block_h if w1.shape[1] % cfg.block_h == 0 else w1.shape[1]
+    bm, bh = _blocks(m, w1.shape[1], cfg)
     xp, pad = _pad_to(x, 0, bm)
     y = fused_mlp_fwd(xp, w1, w2, act=act, block_m=bm, block_h=bh,
                       interpret=cfg.interpret)
@@ -66,8 +76,7 @@ def _fwd(x, w1, w2, _dummy, act, cfg):
 def _bwd(act, cfg, res, dy):
     x, w1, w2 = res
     m = x.shape[0]
-    bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
-    bh = cfg.block_h if w1.shape[1] % cfg.block_h == 0 else w1.shape[1]
+    bm, bh = _blocks(m, w1.shape[1], cfg)
     xp, pad = _pad_to(x, 0, bm)
     dyp, _ = _pad_to(dy, 0, bm)
     dx, dw1, dw2 = fused_mlp_bwd(xp, w1, w2, dyp, act=act, block_m=bm,
@@ -96,8 +105,7 @@ def mlp_swiglu(x: jax.Array, wg, wu, wd, *, act: str = "silu",
     x2 = x.reshape(-1, x.shape[-1])
     if cfg.use_pallas:
         m = x2.shape[0]
-        bm = min(cfg.block_m, m) if m % min(cfg.block_m, m) == 0 else 1
-        bh = cfg.block_h if wg.shape[1] % cfg.block_h == 0 else wg.shape[1]
+        bm, bh = _blocks(m, wg.shape[1], cfg)
         x2p, pad = _pad_to(x2, 0, bm)
         y = fused_mlp_swiglu_fwd(x2p, wg, wu, wd, act=act, block_m=bm,
                                  block_h=bh, interpret=cfg.interpret)
@@ -105,6 +113,51 @@ def mlp_swiglu(x: jax.Array, wg, wu, wd, *, act: str = "silu",
     else:
         y = ref.mlp_swiglu_ref(x2, wg, wu, wd, act=act)
     return y.reshape(*lead, wd.shape[1])
+
+
+def mlp_bwd(x: jax.Array, w1: jax.Array, w2: jax.Array, dy: jax.Array, *,
+            act: str = "gelu", cfg: KernelConfig = KernelConfig()):
+    """(dx, dw1, dw2) of act(x @ w1) @ w2; x/dy may have leading batch dims.
+
+    The executable form of the Fig 2(c) multicast: with `use_pallas` the
+    recomputed hidden tile feeds the dX and dW GEMMs inside the
+    fused_mlp_bwd kernels; otherwise the jnp oracle (same math) runs."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if cfg.use_pallas:
+        m = x2.shape[0]
+        bm, bh = _blocks(m, w1.shape[1], cfg)
+        xp, pad = _pad_to(x2, 0, bm)
+        dyp, _ = _pad_to(dy2, 0, bm)
+        dx, dw1, dw2 = fused_mlp_bwd(xp, w1, w2, dyp, act=act, block_m=bm,
+                                     block_h=bh, interpret=cfg.interpret)
+        dx = dx[:m] if pad else dx
+    else:
+        dx, dw1, dw2 = ref.mlp_bwd_ref(x2, w1, w2, dy2, act=act)
+    return dx.reshape(*lead, x.shape[-1]), dw1, dw2
+
+
+def mlp_swiglu_bwd(x: jax.Array, wg, wu, wd, dy: jax.Array, *,
+                   act: str = "silu", cfg: KernelConfig = KernelConfig()):
+    """(dx, dwg, dwu, dwd) of (act(x @ wg) * (x @ wu)) @ wd -- gated
+    multicast backward; x/dy may have leading batch dims."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if cfg.use_pallas:
+        m = x2.shape[0]
+        bm, bh = _blocks(m, wg.shape[1], cfg)
+        xp, pad = _pad_to(x2, 0, bm)
+        dyp, _ = _pad_to(dy2, 0, bm)
+        dx, dwg, dwu, dwd = fused_mlp_swiglu_bwd(
+            xp, wg, wu, wd, dyp, act=act, block_m=bm, block_h=bh,
+            interpret=cfg.interpret)
+        dx = dx[:m] if pad else dx
+    else:
+        dx, dwg, dwu, dwd = ref.mlp_swiglu_bwd_ref(x2, wg, wu, wd, dy2,
+                                                   act=act)
+    return dx.reshape(*lead, x.shape[-1]), dwg, dwu, dwd
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,75 @@ def mlp_swiglu_ref(x, wg, wu, wd, act: str = "silu"):
     return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+_SQRT_2_OVER_PI = 0.7978845608028654
+_GELU_C = 0.044715
+
+
+def _dgelu(x):
+    """Closed-form derivative of the tanh-approximated gelu (the default
+    `jax.nn.gelu`): 0.5(1+tanh u) + 0.5 x sech^2(u) u', with
+    u = sqrt(2/pi)(x + 0.044715 x^3).  Replaces a per-element
+    `vmap(grad(gelu))` that was catastrophically slow to trace and run;
+    differential-tested against `jax.grad` in tests/test_kernels.py."""
+    u = _SQRT_2_OVER_PI * (x + _GELU_C * x * x * x)
+    t = jnp.tanh(u)
+    du = _SQRT_2_OVER_PI * (1.0 + 3.0 * _GELU_C * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+
+
+# d/dx act(x) -- the SINGLE derivative table: both the jnp oracles below and
+# the Pallas backward kernels (fused_mlp.py imports this) use the same math.
+_DACTS = {
+    "relu": lambda x: (x > 0).astype(x.dtype),
+    "identity": lambda x: jnp.ones_like(x),
+    "gelu": _dgelu,
+    "silu": lambda x: jax.nn.sigmoid(x) * (1 + x * (1 - jax.nn.sigmoid(x))),
+}
+
+
+def _dact(act: str, x):
+    return _DACTS[act](x)
+
+
+def mlp_bwd_ref(x, w1, w2, dy, act: str = "gelu"):
+    """Backward of mlp_ref: recompute the pre-activation, multicast it into
+    the dX GEMM and both dW GEMMs (Fig 2c) -- the fused_mlp_bwd oracle."""
+    pre = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    t = _ACTS[act](pre)
+    dyf = dy.astype(jnp.float32)
+    dt = jnp.dot(dyf, w2.T.astype(jnp.float32))
+    da = dt * _dact(act, pre)
+    dx = jnp.dot(da.astype(x.dtype), w1.T,
+                 preferred_element_type=jnp.float32).astype(x.dtype)
+    dw1 = jnp.dot(x.T.astype(jnp.float32),
+                  da.astype(x.dtype).astype(jnp.float32)).astype(w1.dtype)
+    dw2 = jnp.dot(t.astype(x.dtype).T.astype(jnp.float32),
+                  dyf).astype(w2.dtype)
+    return dx, dw1, dw2
+
+
+def mlp_swiglu_bwd_ref(x, wg, wu, wd, dy, act: str = "silu"):
+    """Backward of mlp_swiglu_ref (gated Fig 2c multicast) -- the
+    fused_mlp_swiglu_bwd oracle."""
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    sg = _ACTS[act](g)
+    t = (sg * u).astype(x.dtype)
+    dyf = dy.astype(jnp.float32)
+    dt = jnp.dot(dyf, wd.T.astype(jnp.float32))
+    dg = dt * u * _dact(act, g)
+    du = dt * sg
+    dx = (jnp.dot(dg.astype(x.dtype), wg.T,
+                  preferred_element_type=jnp.float32)
+          + jnp.dot(du.astype(x.dtype), wu.T,
+                    preferred_element_type=jnp.float32)).astype(x.dtype)
+    xtf = x.T.astype(jnp.float32)
+    dwg = jnp.dot(xtf, dg.astype(x.dtype).astype(jnp.float32)).astype(wg.dtype)
+    dwu = jnp.dot(xtf, du.astype(x.dtype).astype(jnp.float32)).astype(wu.dtype)
+    dwd = jnp.dot(t.T.astype(jnp.float32), dyf).astype(wd.dtype)
+    return dx, dwg, dwu, dwd
+
+
 def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """q: (B,Hq,Sq,D), k/v: (B,Hkv,Skv,D); GQA by head repetition."""
     b, hq, sq, d = q.shape

@@ -8,6 +8,14 @@ process per host; here it drives the same code path on however many devices
 exist (use --reduced on CPU).  Fault tolerance: Supervisor + Checkpointer;
 data: host-sharded synthetic pipeline; parallelism: FSDP(data) x TP(model)
 via the logical-axis rules.
+
+`--compile-mode kitsune` routes the FULL training step (forward, backward,
+loss, optimizer) through the dataflow pipeline instead of one jit: the step
+is traced into the operator graph with custom-vjp MLP/attention atomics,
+`lower_kernels` binds the MLP blocks to the fused Pallas kernels in both
+directions, and the ExecutionPlan donates the old state buffers so params
+and optimizer moments update in place (safe with checkpointing: the
+Checkpointer stages state to host before the next step runs).
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ from repro.data import DataConfig, SyntheticLM
 from repro.distributed.sharding import NULL, Sharder
 from repro.optim import adafactor, adamw, cosine_schedule
 from repro.runtime import StragglerMonitor, Supervisor
-from repro.train import TrainConfig, make_train_state, make_train_step
+from repro.train import (TrainConfig, compile_train_step, make_train_state,
+                         make_train_step)
 
 
 def main():
@@ -40,6 +49,12 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compile-mode", default=None,
+                    choices=("bsp", "vertical", "kitsune"),
+                    help="run the training step through the dataflow "
+                         "pipeline (repro.compile of the full "
+                         "fwd+bwd+optimizer step, state donated in place) "
+                         "instead of a plain jit; single-device only")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,9 +71,28 @@ def main():
     giant = cfg.param_count() > 100e9
     opt = adafactor(1e-2) if giant else adamw(
         cosine_schedule(3e-4, warmup=20, total=args.steps))
-    step_fn = jax.jit(make_train_step(
-        cfg, opt, TrainConfig(remat=True, microbatches=args.microbatches),
-        sharder=sharder))
+    tc = TrainConfig(remat=True, microbatches=args.microbatches,
+                     xent_chunk=min(512, args.seq))
+    if args.compile_mode is not None and n_dev > 1:
+        raise SystemExit("--compile-mode drives the single-device dataflow "
+                         "pipeline; use mesh 1x1")
+    if args.compile_mode is not None:
+        # built lazily on the first step (the compiled artifact traces on
+        # the example state/batch; Supervisor may restore state from a
+        # checkpoint first)
+        compiled = {}
+
+        def step_fn(state, batch):
+            if "app" not in compiled:
+                compiled["app"] = compile_train_step(
+                    cfg, opt, tc, state=state, batch=batch,
+                    compile_mode=args.compile_mode)
+                print(compiled["app"].lowering.summary()
+                      if compiled["app"].lowering is not None
+                      else "(no kernel lowering in this mode)", flush=True)
+            return compiled["app"](state, batch)
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt, tc, sharder=sharder))
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                   global_batch=args.batch))
     ck = Checkpointer(args.ckpt, keep=3, async_save=True)

@@ -1,0 +1,155 @@
+"""Lowerable training atomics: custom-vjp capture boundaries for the model
+building blocks, so a traced `jax.grad` training step keeps its MLP / SwiGLU
+/ attention blocks -- in BOTH directions -- as single recognizable graph
+nodes instead of dissolving them into autodiff soup.
+
+Each atom is an `atomic_vjp` pair (core/trace.py): the forward impl is the
+kernels' jnp oracle (`ref.mlp_ref` / `ref.mlp_swiglu_ref`), the backward impl
+is the matching oracle backward (`ref.mlp_bwd_ref` / `ref.mlp_swiglu_bwd_ref`
+-- the same recompute-multicast math the Pallas kernels run).  The `lower=`
+hints let the `lower_kernels` pass bind the nodes to the REAL kernels
+(`fused_mlp_fwd` / `fused_mlp_swiglu_fwd` forward, `fused_mlp_bwd` /
+`fused_mlp_swiglu_bwd` backward); unlowered execution replays the oracles, so
+the two paths are numerically interchangeable.
+
+Attention stays a single node per direction too: the backward impl RECOMPUTES
+the forward (the chunked online-softmax) and pulls cotangents through
+`jax.vjp` inside one node -- the flash-style recompute path.  No attention
+backward kernel exists yet (ROADMAP), so lowering records a fallback reason
+and the recompute closure runs on the jnp path.
+
+`dataflow_training()` installs the atoms over `layers.mlp_block` and the
+`chunked_attention` entrypoints for the duration of a trace:
+
+    with atoms.dataflow_training():
+        app = repro.compile(step_fn, (state, batch), mode="kitsune")
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trace import atomic_vjp, attention_flops
+from repro.kernels import ref
+from . import encdec, layers, lm
+
+
+def _flatten2(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLP / SwiGLU atoms (memoized per activation)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def mlp_atom(act: str):
+    """(x, w1, w2) -> act(x @ w1) @ w2 as a differentiable atomic pair."""
+    def fwd(x, w1, w2):
+        y = ref.mlp_ref(_flatten2(x), w1, w2, act=act)
+        return y.reshape(*x.shape[:-1], w2.shape[1])
+
+    def bwd(x, w1, w2, dy):
+        dx, dw1, dw2 = ref.mlp_bwd_ref(_flatten2(x), w1, w2, _flatten2(dy),
+                                       act=act)
+        return dx.reshape(x.shape), dw1, dw2
+
+    return atomic_vjp(fwd, bwd, "matmul", name=f"mlp_{act}",
+                      lower=("mlp_fwd", ("act", act)),
+                      bwd_lower=("mlp_bwd", ("act", act)))
+
+
+@functools.lru_cache(maxsize=None)
+def swiglu_atom(act: str = "silu"):
+    """(x, wg, wu, wd) -> (act(x@wg) * (x@wu)) @ wd as an atomic pair."""
+    def fwd(x, wg, wu, wd):
+        y = ref.mlp_swiglu_ref(_flatten2(x), wg, wu, wd, act=act)
+        return y.reshape(*x.shape[:-1], wd.shape[1])
+
+    def bwd(x, wg, wu, wd, dy):
+        dx, dwg, dwu, dwd = ref.mlp_swiglu_bwd_ref(
+            _flatten2(x), wg, wu, wd, _flatten2(dy), act=act)
+        return dx.reshape(x.shape), dwg, dwu, dwd
+
+    return atomic_vjp(fwd, bwd, "matmul", name=f"swiglu_{act}",
+                      lower=("swiglu_fwd", ("act", act)),
+                      bwd_lower=("swiglu_bwd", ("act", act)))
+
+
+# ---------------------------------------------------------------------------
+# attention atom (flash-style recompute backward)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def attention_atom(causal: bool, chunk: int, orig=None):
+    """(q, k, v, window) -> chunked attention as a differentiable atomic.
+
+    `window` is a runtime operand (per-layer scan xs), so it rides as an
+    array input past `n_diff` (zero cotangent).  The backward node
+    recomputes the forward and pulls (dq, dk, dv) via jax.vjp -- one
+    flash-recompute node."""
+    attn = orig or lm.chunked_attention
+
+    def fwd(q, k, v, window):
+        return attn(q, k, v, causal=causal, window=window, chunk=chunk)
+
+    def bwd(q, k, v, window, dy):
+        _, pull = jax.vjp(
+            lambda q_, k_, v_: attn(q_, k_, v_, causal=causal,
+                                    window=window, chunk=chunk), q, k, v)
+        return pull(dy)
+
+    def flops(in_avals, out_avals):
+        return attention_flops(in_avals, out_avals)
+
+    return atomic_vjp(fwd, bwd, "attention", name=f"attn_c{int(causal)}",
+                      n_diff=3,
+                      flops=flops, bwd_flops=lambda i, o: 2 * flops(i, o),
+                      lower=("attention_fwd", ("causal", causal)),
+                      bwd_lower=("attention_bwd",))
+
+
+# ---------------------------------------------------------------------------
+# capture context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def dataflow_training():
+    """Route the model blocks through the training atoms for the duration of
+    a trace.  Patches `layers.mlp_block` (dense/encdec MLPs; MoE keeps its
+    scatter-dispatch path) and both `chunked_attention` entrypoints; the
+    originals are restored on exit, so only capture sees the atoms.
+
+    The patch is a PROCESS-WIDE module-global swap: enter this context only
+    around tracing (milliseconds), never around execution, and not while
+    other threads run models (a concurrent serve tick would pick up the
+    oracle-backed atoms).  `compile_train_step` scopes it correctly."""
+    orig_mlp = layers.mlp_block
+    orig_attn_lm = lm.chunked_attention
+    orig_attn_ed = encdec.chunked_attention
+
+    def mlp_block(p, x, *, act="swiglu",
+                  kernels=None, constrain=lambda t, _: t):
+        if act == "swiglu":
+            y = swiglu_atom("silu")(x, p["wg"], p["wu"], p["wd"])
+        else:
+            y = mlp_atom(act)(x, p["w1"], p["w2"])
+        return constrain(y, "act_resid")
+
+    def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
+        win = jnp.asarray(lm.HUGE_WINDOW if window is None else window,
+                          jnp.int32)
+        return attention_atom(causal, chunk, orig_attn_lm)(q, k, v, win)
+
+    layers.mlp_block = mlp_block
+    lm.chunked_attention = chunked_attention
+    encdec.chunked_attention = chunked_attention
+    try:
+        yield
+    finally:
+        layers.mlp_block = orig_mlp
+        lm.chunked_attention = orig_attn_lm
+        encdec.chunked_attention = orig_attn_ed

@@ -62,10 +62,14 @@ def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
 
     def init(params):
         def zero(p):
-            z = jnp.zeros(p.shape, jnp.float32)
+            # m and v must be DISTINCT buffers: the compiled training step
+            # donates optimizer state in place, and donating one aliased
+            # buffer at two state positions is an XLA runtime error
+            m = jnp.zeros(p.shape, jnp.float32)
+            v = jnp.zeros(p.shape, jnp.float32)
             if state_bits == 8:
-                return (quantize_blockwise(z, block), quantize_blockwise(z, block))
-            return (z, z)
+                return (quantize_blockwise(m, block), quantize_blockwise(v, block))
+            return (m, v)
         return OptState(jnp.zeros((), jnp.int32),
                         jax.tree.map(zero, params))
 

@@ -1,3 +1,5 @@
-from .step import TrainConfig, loss_fn, make_train_step, make_train_state
+from .step import (TrainConfig, compile_train_step, loss_fn, make_train_step,
+                   make_train_state)
 
-__all__ = ["TrainConfig", "loss_fn", "make_train_step", "make_train_state"]
+__all__ = ["TrainConfig", "compile_train_step", "loss_fn", "make_train_step",
+           "make_train_state"]

@@ -28,6 +28,10 @@ class TrainConfig:
     max_grad_norm: float = 1.0
     remat: bool = True
     z_loss: float = 1e-4           # logit regularizer (stabilizes bf16 LMs)
+    # sequence-chunk width of the chunked cross entropy (peak logits memory
+    # is O(chunk * vocab)); small values keep TRACED training graphs tiny
+    # when the dataflow pipeline unrolls the xent scan (compile_train_step)
+    xent_chunk: int = 512
 
 
 def loss_fn(logits: jax.Array, tokens: jax.Array, z_loss: float = 0.0):
@@ -117,7 +121,8 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer,
                                return_hidden=True)
         table = params.get("unembed", params["embed"])
         return chunked_softmax_xent(hidden, table, batch["tokens"],
-                                    tc.z_loss, sharder=sharder)
+                                    tc.z_loss, chunk=tc.xent_chunk,
+                                    sharder=sharder)
 
     def step(state, batch):
         params = state["params"]
@@ -147,3 +152,36 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer,
         return {"params": new_params, "opt": new_opt}, metrics
 
     return step
+
+
+def compile_train_step(cfg: ArchConfig, opt: Optimizer,
+                       tc: TrainConfig = TrainConfig(), *,
+                       state, batch, compile_mode: str = "kitsune",
+                       donate_state: bool = True, **compile_kwargs):
+    """The full training step -- forward, backward, loss, optimizer update --
+    compiled through the dataflow pipeline.
+
+    Traces `make_train_step(cfg, opt, tc)` on the example (state, batch)
+    under `models.atoms.dataflow_training()`, so the MLP / SwiGLU blocks
+    survive capture as custom-vjp atomics in BOTH directions and the
+    `lower_kernels` pass binds them to the real Pallas kernels
+    (`fused_mlp_fwd` forward, `fused_mlp_bwd` backward -- the Fig 2(c)
+    multicast, executable, not plan-only).  Attention stays single-node with
+    a flash-style recompute backward on the jnp path.
+
+    Returns a TracedApp: `app(state, batch) -> (state, metrics)`, same
+    contract as the raw step.  With `donate_state` (default) the state
+    argument's buffers are DONATED -- parameters and optimizer moments
+    update in place, so feed each call the previous call's output state, not
+    a retained copy.
+
+    The serving analogue is `ServeConfig(compile_mode=...)`; this is the
+    training side of the same switch."""
+    import repro
+    from repro.models import atoms
+
+    step_fn = make_train_step(cfg, opt, tc)
+    donate = (0,) if donate_state else ()
+    with atoms.dataflow_training():
+        return repro.compile(step_fn, (state, batch), mode=compile_mode,
+                             donate_argnums=donate, **compile_kwargs)
