@@ -1,0 +1,137 @@
+"""Serving-engine bench: paged (block-paged KV + chunked prefill) vs the
+legacy contiguous-cache engine on the same request stream.
+
+Both engines run an identical workload -- N greedy requests, no EOS, the
+same per-request length cap -- so generated-token counts match exactly and
+``tokens/s`` is directly comparable.  The paged engine is given 2x the
+slots of the legacy engine: the point of paging is that block-granular
+allocation admits MORE concurrent requests from the same KV budget, so the
+tracked claim is
+
+    paged tokens/s >= legacy tokens/s  AND  paged peak_active > legacy slots
+
+Per-engine numbers: tokens/s over the drained workload, p50/p99 per-tick
+latency (a tick is the engine's scheduling quantum -- its tail IS the
+inter-token stall a streaming client sees), ticks, and peak concurrent
+requests.  Compile time is excluded: each engine runs the workload once to
+warm the process-wide executable cache, then a FRESH engine instance is
+timed (steady-state serving, not cold start).
+
+Smoke mode (``benchmarks/run.py --smoke``) records the result under the
+``serve`` key of BENCH_smoke.json (schema 3).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import PagedServingEngine, ServeConfig, ServingEngine
+
+
+def _prompts(n: int) -> dict[int, list[int]]:
+    return {i: [3 + i, 17, 5, 2] for i in range(n)}
+
+
+def _drive(eng, max_ticks: int = 10_000) -> tuple[float, list[float]]:
+    """Drain the engine, returning (wall seconds, per-tick seconds)."""
+    laps = []
+    t0 = time.perf_counter()
+    for _ in range(max_ticks):
+        t1 = time.perf_counter()
+        left = eng.tick()
+        laps.append(time.perf_counter() - t1)
+        if left == 0:
+            break
+    else:
+        raise RuntimeError("serving bench did not drain")
+    return time.perf_counter() - t0, laps
+
+
+def _pct(xs: list[float], q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(q * len(ys)))]
+
+
+def _run_engine(make, prompts) -> dict:
+    """Warm the executable cache with one throwaway run, then time a fresh
+    engine on the same workload."""
+    warm = make()
+    for rid, p in prompts.items():
+        warm.submit_any(rid, p)
+    warm.run_until_done()
+
+    eng = make()
+    for rid, p in prompts.items():
+        eng.submit_any(rid, p)
+    wall, laps = _drive(eng)
+    tokens = sum(len(v) for v in eng.done.values())
+    assert len(eng.done) == len(prompts), "bench workload did not finish"
+    return {"tokens": tokens, "wall_s": wall, "ticks": len(laps),
+            "tok_s": tokens / wall,
+            "tick_p50_ms": _pct(laps, 0.50) * 1e3,
+            "tick_p99_ms": _pct(laps, 0.99) * 1e3}
+
+
+class _LegacyAdapter(ServingEngine):
+    def submit_any(self, rid, prompt):
+        self.submit(rid, prompt)
+
+
+class _PagedAdapter(PagedServingEngine):
+    def submit_any(self, rid, prompt):
+        self.submit(prompt, rid=rid)
+
+
+def main(csv: bool = True, n_requests: int = 8, max_len: int = 24,
+         batch: int = 2) -> dict:
+    cfg = get_config("gemma3-1b").reduced()
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = _prompts(n_requests)
+
+    legacy = _run_engine(
+        lambda: _LegacyAdapter(
+            cfg, params, ServeConfig(max_len=max_len, batch=batch),
+            eos_id=-1),
+        prompts)
+    legacy["slots"] = batch
+
+    # 2x the slots from the same KV budget: blocks_for(max_len) per slot is
+    # the worst case, so 2*batch slots of a paged pool == the bytes the
+    # legacy engine would need for 2*batch contiguous rows -- but the pool
+    # only materialises pages sequences actually reach.
+    def make_paged():
+        eng = _PagedAdapter(
+            cfg, params,
+            ServeConfig(max_len=max_len, batch=2 * batch, prefill_chunk=4),
+            eos_id=-1)
+        return eng
+
+    paged = _run_engine(make_paged, prompts)
+    probe = make_paged()
+    for rid, p in prompts.items():
+        probe.submit_any(rid, p)
+    probe.run_until_done()
+    st = probe.stats()
+    paged["slots"] = 2 * batch
+    paged["peak_active"] = st["peak_active"]
+    paged["step_programs"] = st["step_programs"]
+
+    out = {"legacy": legacy, "paged": paged,
+           "speedup": paged["tok_s"] / legacy["tok_s"],
+           "more_concurrency": paged["peak_active"] > legacy["slots"]}
+    if csv:
+        for name, r in (("legacy", legacy), ("paged", paged)):
+            us = r["wall_s"] / max(r["tokens"], 1) * 1e6
+            print(f"serve_{name},{us:.1f},"
+                  f"tok_s={r['tok_s']:.1f} ticks={r['ticks']} "
+                  f"p50={r['tick_p50_ms']:.2f}ms p99={r['tick_p99_ms']:.2f}ms")
+        print(f"serve_speedup,,{out['speedup']:.2f}x "
+              f"peak_active={paged['peak_active']} vs {batch} legacy slots")
+    return out
+
+
+if __name__ == "__main__":
+    main()

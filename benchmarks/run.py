@@ -13,7 +13,7 @@ import traceback
 
 
 def smoke(out_path: str = "BENCH_smoke.json") -> dict:
-    from . import bench_coverage, bench_dispatch, bench_e2e
+    from . import bench_coverage, bench_dispatch, bench_e2e, bench_serve
     zoo_names = ["gemma3-1b", "qwen1.5-32b"]
     t0 = time.time()
     gm_i, gm_t = bench_e2e.main(csv=False)
@@ -39,8 +39,12 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     # ExecutionPlans (params donated), measured kitsune-vs-bsp wall-clock
     # and XLA boundary traffic (see EXPERIMENTS.md for the schema)
     apps_train = bench_e2e.measured_train_e2e(csv=False, iters=5)
+    # serving axis: paged KV engine vs the legacy contiguous engine, same
+    # request stream; tracks tokens/s, tick p50/p99, and the concurrency
+    # headroom paging buys (peak_active vs legacy slot count)
+    serve = bench_serve.main(csv=False)
     results = {
-        "schema": 2,
+        "schema": 3,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -52,6 +56,7 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "zoo_e2e": zoo_e2e,
         "zoo_coverage": zoo_cov,
         "dispatch_overhead": dispatch,
+        "serve": serve,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -60,7 +65,9 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     print(f"# smoke results -> {out_path} "
           f"(e2e geomean inf={gm_i:.2f} train={gm_t:.2f}, "
           f"zoo={list(zoo_e2e)}, train_traffic_red={train_red}, "
-          f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x)")
+          f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x, "
+          f"serve_paged={serve['paged']['tok_s']:.0f}tok/s "
+          f"{serve['speedup']:.2f}x legacy)")
     return results
 
 
@@ -77,7 +84,7 @@ def main() -> None:
         return
     from . import (bench_coverage, bench_dispatch, bench_e2e, bench_kernels,
                    bench_queue, bench_roofline, bench_sensitivity,
-                   bench_subgraph, bench_utilization)
+                   bench_serve, bench_subgraph, bench_utilization)
     sections = [
         ("Fig5_queue_bandwidth", bench_queue.main),
         ("Table2_coverage_traffic", bench_coverage.main),
@@ -87,6 +94,7 @@ def main() -> None:
         ("Fig3_13_utilization", bench_utilization.main),
         ("kernel_benchmarks", bench_kernels.main),
         ("dispatch_overhead", bench_dispatch.main),
+        ("serving_engines", bench_serve.main),
         ("roofline_table", bench_roofline.main),
     ]
     failed = []

@@ -1,9 +1,11 @@
-"""Batched serving driver: continuous-batching engine over a small LM.
+"""Batched serving driver: paged async engine over a small LM.
 
     python -m examples.serve_lm        (PYTHONPATH=src)
 
-Demonstrates: prefill-free slot admission (prompts teacher-forced through
-the decode path), KV-cache decode, slot refill, greedy determinism.
+Demonstrates: async submission with streaming handles, block-paged KV with
+chunked prefill, slot refill with per-slot positions (greedy determinism:
+each request's output is bitwise what it would be served alone), prefix
+caching across requests with shared prompt prefixes.  See docs/SERVING.md.
 """
 import time
 
@@ -11,31 +13,31 @@ import jax
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import AsyncServingEngine, ServeConfig
 
 
 def main():
     cfg = get_config("gemma3-1b").reduced()
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, ServeConfig(max_len=48, batch=4),
-                        eos_id=-1)
-    prompts = {i: [3 + i, 17, 5] for i in range(10)}   # 10 requests, 4 slots
-    for rid, p in prompts.items():
-        eng.submit(rid, p)
+    shared = [7, 11, 13, 19, 23, 29, 31, 37]      # common prefix: cacheable
+    prompts = {i: shared + [3 + i] for i in range(10)}  # 10 requests, 4 slots
     t0 = time.time()
-    ticks = 0
-    while eng.tick() > 0:
-        ticks += 1
-        if ticks > 2000:
-            raise RuntimeError("serving did not drain")
+    with AsyncServingEngine(cfg, params,
+                            ServeConfig(max_len=48, batch=4, num_blocks=64),
+                            eos_id=-1) as eng:
+        handles = [eng.submit(p, rid=rid) for rid, p in prompts.items()]
+        done = {h.rid: h.result(timeout=600) for h in handles}
+        stats = eng.engine.stats()
     dt = time.time() - t0
-    done = eng.done
     total_tokens = sum(len(v) for v in done.values())
     print(f"served {len(done)} requests, {total_tokens} tokens, "
-          f"{ticks} ticks in {dt:.1f}s "
-          f"({total_tokens / dt:.0f} tok/s on CPU)")
+          f"{stats['ticks']} ticks in {dt:.1f}s "
+          f"({total_tokens / dt:.0f} tok/s on CPU); "
+          f"prefix cache hits={stats['prefix_cache']['hits']}, "
+          f"peak_active={stats['peak_active']}")
     assert len(done) == 10 and all(len(v) > 0 for v in done.values())
+    assert stats["prefix_cache"]["hits"] > 0
     print("serve_lm OK")
 
 

@@ -444,7 +444,26 @@ class CompiledApp:
                                  f"{'+'.join(m.ops)} -> {m.out}")
                 for op, why in low.fallbacks.items():
                     lines.append(f"    fallback {op}: {why}")
+        if self.donate_feeds:
+            rep = self.donation_report()
+            lines.append(f"  donation declared={','.join(rep['declared_feeds'])}"
+                         f" plans={rep['n_plans']}"
+                         f" saved={rep['bytes_saved'] / 1e6:.2f}MB")
+            for i, p in enumerate(rep["plans"]):
+                note = " (declined)" if p["declined"] else ""
+                lines.append(
+                    f"    plan {i}: donated={p['donated_bytes'] / 1e6:.2f}MB "
+                    f"aliased={p['aliased_bytes'] / 1e6:.2f}MB{note}")
+                for name, e in sorted(p["feeds"].items()):
+                    ok = "aliased" if e["aliased"] else "NOT aliased"
+                    lines.append(f"      feed {name}: "
+                                 f"{e['nbytes'] / 1e6:.3f}MB {ok}")
         return "\n".join(lines)
+
+    def donation_report(self) -> dict:
+        """Which feeds XLA actually aliased in place, and bytes saved, per
+        live ExecutionPlan (see Engine.donation_report)."""
+        return self._engine.donation_report()
 
     def __repr__(self):
         return (f"CompiledApp({self.graph.name!r}, mode={self.options.mode!r}, "

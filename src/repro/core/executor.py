@@ -286,6 +286,16 @@ class _Executable:
     compiled: Any
     bytes_accessed: float
     temp_bytes: float
+    # donation telemetry: ((arg name, nbytes, is_declared_feed), ...) for the
+    # positions jit was ASKED to donate, XLA's measured alias bytes for the
+    # whole executable, and whether XLA warned that some donation was unusable
+    donation: tuple = ()
+    aliased_bytes: float = 0.0
+    donation_declined: bool = False
+
+    @property
+    def donated_bytes(self) -> float:
+        return float(sum(nb for _, nb, _ in self.donation))
 
 
 def _traffic(compiled) -> tuple[float, float]:
@@ -555,7 +565,8 @@ class _BoundStep:
     over these with no dict keying, no cache lookups, no shape hashing.
     Programs with no params are compiled WITHOUT the psub argument (an empty
     dict still costs a pytree flatten on every dispatch)."""
-    __slots__ = ("call", "in_slots", "out_slots", "pkeys", "release")
+    __slots__ = ("call", "in_slots", "out_slots", "pkeys", "release",
+                 "donation")
 
     def __init__(self, exe, spec: _StepSpec, pkeys: tuple[str, ...]):
         self.call = exe.compiled
@@ -563,6 +574,9 @@ class _BoundStep:
         self.out_slots = spec.out_slots
         self.pkeys = pkeys
         self.release = spec.release
+        # (donated entries, measured alias bytes, declined?) for telemetry
+        self.donation = (exe.donation, exe.aliased_bytes,
+                         exe.donation_declined)
 
 
 def _compile_step(st) -> Callable:
@@ -612,7 +626,7 @@ class ExecutionPlan:
     `steps` keeps the bound step objects for introspection; `fns` are the
     specialized closures the hot loop actually runs."""
     __slots__ = ("steps", "fns", "bytes_accessed", "temp_bytes",
-                 "n_programs")
+                 "n_programs", "donation")
 
     def __init__(self, steps, bytes_accessed, temp_bytes, n_programs):
         self.steps = steps
@@ -620,6 +634,37 @@ class ExecutionPlan:
         self.bytes_accessed = bytes_accessed
         self.temp_bytes = temp_bytes
         self.n_programs = n_programs
+        self.donation = self._donation_summary(steps)
+
+    @staticmethod
+    def _donation_summary(steps) -> dict:
+        """Aggregate per-executable donation telemetry for this plan: which
+        values (and in particular which DECLARED feeds) were donated, how
+        many bytes XLA actually aliased in place, and whether any donation
+        was declined (saved bytes = aliased bytes: each one is a buffer the
+        program reused instead of allocating fresh)."""
+        feeds: dict[str, dict] = {}
+        donated = aliased = 0.0
+        declined = False
+        for st in steps:
+            info = getattr(st, "donation", None)
+            if not info:
+                continue
+            entries, alias_bytes, was_declined = info
+            step_donated = float(sum(nb for _, nb, _ in entries))
+            donated += step_donated
+            aliased += alias_bytes
+            declined |= was_declined and bool(entries)
+            ok = not was_declined and alias_bytes >= step_donated > 0
+            for name, nb, is_feed in entries:
+                if not is_feed:
+                    continue
+                e = feeds.setdefault(name, {"nbytes": 0, "aliased": True})
+                e["nbytes"] += nb
+                e["aliased"] &= ok
+        return {"donated_bytes": donated, "aliased_bytes": aliased,
+                "bytes_saved": min(aliased, donated) if donated else 0.0,
+                "declined": declined, "feeds": feeds}
 
 
 class Engine:
@@ -833,8 +878,7 @@ class Engine:
         return ExecutionReport(outs, total_bytes, n_programs, total_temp,
                                hits, misses)
 
-    @staticmethod
-    def _build_positional(prog: Program, ins: tuple, psub: dict,
+    def _build_positional(self, prog: Program, ins: tuple, psub: dict,
                           donate: tuple[int, ...]) -> _Executable:
         if psub:
             def wrapped(psub_, *arrs):
@@ -851,14 +895,53 @@ class Engine:
         jit_kw = {}
         if donate:
             jit_kw["donate_argnums"] = tuple(p + shift for p in donate)
-        with warnings.catch_warnings():
+        with warnings.catch_warnings(record=True) as caught:
             # an unusable donation (XLA declined to alias, e.g. on CPU) is
-            # only a missed reuse -- the dead buffer is freed either way
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
+            # only a missed reuse -- the dead buffer is freed either way.
+            # RECORD instead of ignore: declined donations feed the telemetry
+            # `Engine.donation_report()` / `CompiledApp.describe()` expose.
+            warnings.simplefilter("always")
             compiled = jax.jit(wrapped, **jit_kw).lower(*args).compile()
+        declined = any("donated buffers were not usable" in str(w.message)
+                       for w in caught)
+        for w in caught:  # replay anything unrelated to donation
+            if "donated buffers were not usable" not in str(w.message):
+                warnings.warn_explicit(w.message, w.category, w.filename,
+                                       w.lineno)
         b, t = _traffic(compiled)
-        return _Executable(compiled, b, t)
+        info = tuple(
+            (prog.needs[p],
+             int(np.prod(ins[p].shape)) * ins[p].dtype.itemsize,
+             prog.needs[p] in self.donate_feeds)
+            for p in donate)
+        try:
+            aliased = float(getattr(compiled.memory_analysis(),
+                                    "alias_size_in_bytes", 0.0) or 0.0)
+        except Exception:
+            aliased = 0.0
+        return _Executable(compiled, b, t, donation=info,
+                           aliased_bytes=aliased,
+                           donation_declined=declined)
+
+    def donation_report(self) -> dict:
+        """Donation telemetry across this engine's live ExecutionPlans:
+        per-plan donated/aliased byte totals plus, for each DECLARED feed
+        (donate_feeds), whether XLA actually aliased it in place.  On
+        backends where donation is unsupported (or declined) the report
+        shows donated > 0 with aliased == 0 -- the dead buffers were still
+        freed, just not reused in place."""
+        plans = []
+        for plan in self._plans.values():
+            d = plan.donation
+            plans.append({"donated_bytes": d["donated_bytes"],
+                          "aliased_bytes": d["aliased_bytes"],
+                          "bytes_saved": d["bytes_saved"],
+                          "declined": d["declined"],
+                          "feeds": {k: dict(v) for k, v in d["feeds"].items()}})
+        return {"declared_feeds": sorted(self.donate_feeds),
+                "n_plans": len(plans),
+                "plans": plans,
+                "bytes_saved": sum(p["bytes_saved"] for p in plans)}
 
     # -- pre-plan reference loop (bench baseline + differential oracle) ----
     def run_legacy(self, feeds: dict[str, jax.Array], params: dict,

@@ -134,8 +134,34 @@ def _decode_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, n_s,
     l_ref[0, 0] = l_c
 
 
+def _decode_kernel_dyn(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, *,
+                       scale):
+    """Decode chunk kernel with a RUNTIME per-sequence valid length.
+
+    `valid_ref` holds this (batch, kv-head) program's valid length -- the
+    serving engine's per-slot position clock (each slot attends to exactly
+    its own [0, valid) cache range; a refilled slot never sees the previous
+    occupant's stale entries)."""
+    schunk = pl.program_id(1)
+    q = q_ref[0]
+    k = k_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    base = schunk * k.shape[0]
+    ki = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ki < valid_ref[0, 0], s, NEG_INF)
+    m_c = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m_c)
+    l_c = jnp.sum(p, axis=-1, keepdims=True)
+    o_c = jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                  preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o_c
+    m_ref[0, 0] = m_c
+    l_ref[0, 0] = l_c
+
+
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                 valid_len: int | None = None, scale: float | None = None,
+                 valid_len: int | jax.Array | None = None,
+                 scale: float | None = None,
                  block_s: int = 256, interpret: bool = False) -> jax.Array:
     """Decode attention: q (B, Hq, 1, D), kv (B, Hkv, S, D).
 
@@ -143,6 +169,12 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     chunks (each emits (o, m, l)); the final merge is the queue_reduce
     combine.  This is the reduction-dimension parallelism the paper uses to
     'ease pressure on batch size'.
+
+    `valid_len` masks cache positions >= valid: a static python int
+    specializes the kernel; a traced scalar or a per-sequence (B,) vector
+    (the serving engine's per-slot position clock) is fed as a runtime
+    operand instead, so one compiled kernel serves every mix of slot
+    positions.
     """
     b, hq, one, d = q.shape
     _, hkv, s_len, _ = k.shape
@@ -157,15 +189,34 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qr = q.reshape(b * hkv, group, d)   # group heads share this kv head
     kr = k.reshape(b * hkv, s_len, d)
     vr = v.reshape(b * hkv, s_len, d)
-    o, m, l = pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, n_s=n_s,
-                          valid_len=valid_len),
-        grid=(b * hkv, n_s),
-        in_specs=[
+    static = isinstance(valid_len, int)
+    if static:
+        kern = functools.partial(_decode_kernel, scale=scale, n_s=n_s,
+                                 valid_len=valid_len)
+        in_specs = [
             pl.BlockSpec((1, group, d), lambda bh, j: (bh, 0, 0)),
             pl.BlockSpec((1, block_s, d), lambda bh, j: (bh, j, 0)),
             pl.BlockSpec((1, block_s, d), lambda bh, j: (bh, j, 0)),
-        ],
+        ]
+        args = (qr, kr, vr)
+    else:
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim == 0:
+            vl = jnp.broadcast_to(vl, (b,))
+        # (B,) -> (B*Hkv, 1): program bh serves batch element bh // hkv
+        vl = jnp.repeat(vl, hkv).reshape(b * hkv, 1)
+        kern = functools.partial(_decode_kernel_dyn, scale=scale)
+        in_specs = [
+            pl.BlockSpec((1, group, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_s, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, 1), lambda bh, j: (bh, 0)),
+        ]
+        args = (qr, kr, vr, vl)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(b * hkv, n_s),
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, group, d), lambda bh, j: (bh, j, 0, 0)),
             pl.BlockSpec((1, 1, group, 1), lambda bh, j: (bh, j, 0, 0)),
@@ -177,7 +228,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
             jax.ShapeDtypeStruct((b * hkv, n_s, group, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(qr, kr, vr)
+    )(*args)
     out = combine_partials(o, m, l)     # (b*hkv, group, d)
     return out.reshape(b, hq, 1, d).astype(q.dtype)
 

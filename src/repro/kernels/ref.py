@@ -121,7 +121,11 @@ def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
 
 
 def decode_ref(q, k, v, *, valid_len=None, scale=None):
-    """q: (B,Hq,1,D); masks cache positions >= valid_len."""
+    """q: (B,Hq,1,D); masks cache positions >= valid_len.
+
+    `valid_len` may be a scalar or a per-sequence (B,) vector -- the serving
+    engine's per-slot position clock (each slot attends to exactly its own
+    [0, valid) cache range)."""
     b, hq, _, d = q.shape
     _, hkv, s_len, _ = k.shape
     scale = scale if scale is not None else d ** -0.5
@@ -132,7 +136,11 @@ def decode_ref(q, k, v, *, valid_len=None, scale=None):
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if valid_len is not None:
-        s = jnp.where(jnp.arange(s_len)[None, None, None, :] < valid_len,
+        if jnp.ndim(valid_len) == 1:          # per-slot (B,) valid ranges
+            valid = jnp.asarray(valid_len)[:, None, None, None]
+        else:
+            valid = valid_len
+        s = jnp.where(jnp.arange(s_len)[None, None, None, :] < valid,
                       s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p,

@@ -1,7 +1,14 @@
 """Production serving launcher.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
-        --requests 16 --batch 4 --max-len 64
+        --engine async --requests 16 --batch 4 --max-len 64
+
+``--engine`` picks the stack: ``paged`` (block-paged KV + chunked prefill,
+the production default), ``async`` (the same engine behind the background
+tick loop / streaming handles), or ``legacy`` (the contiguous-cache
+baseline).  ``--compile-mode kitsune`` routes the decode tick through the
+dataflow pipeline; ``--num-blocks`` overrides the profiled pool capacity
+(useful on CPU).  See docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -12,7 +19,8 @@ import jax
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import (AsyncServingEngine, PagedServingEngine, ServeConfig,
+                         ServingEngine)
 
 
 def main():
@@ -22,6 +30,13 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--engine", choices=["paged", "async", "legacy"],
+                    default="paged")
+    ap.add_argument("--compile-mode", default=None,
+                    choices=["bsp", "vertical", "kitsune"])
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size; default: on-device profiling pass")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -29,17 +44,34 @@ def main():
         cfg = cfg.reduced()
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params,
-                        ServeConfig(max_len=args.max_len, batch=args.batch),
-                        eos_id=-1)
-    for rid in range(args.requests):
-        eng.submit(rid, [2 + rid % 7, 11, 23])
+    prompts = [[2 + rid % 7, 11, 23] for rid in range(args.requests)]
+    sc = ServeConfig(max_len=args.max_len, batch=args.batch,
+                     compile_mode=args.compile_mode,
+                     num_blocks=args.num_blocks,
+                     prefill_chunk=args.prefill_chunk)
+
     t0 = time.time()
-    done = eng.run_until_done()
+    if args.engine == "legacy":
+        eng = ServingEngine(cfg, params, sc, eos_id=-1)
+        for rid, p in enumerate(prompts):
+            eng.submit(rid, p)
+        done = eng.run_until_done()
+        extra = ""
+    elif args.engine == "paged":
+        eng = PagedServingEngine(cfg, params, sc, eos_id=-1)
+        for rid, p in enumerate(prompts):
+            eng.submit(p, rid=rid)
+        done = eng.run_until_done()
+        extra = f" stats={eng.stats()}"
+    else:
+        with AsyncServingEngine(cfg, params, sc, eos_id=-1) as eng:
+            handles = [eng.submit(p) for p in prompts]
+            done = {h.rid: h.result(timeout=600) for h in handles}
+        extra = f" stats={eng.engine.stats()}"
     dt = time.time() - t0
     toks = sum(len(v) for v in done.values())
-    print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
-          f"in {dt:.1f}s ({toks / dt:.0f} tok/s)")
+    print(f"[{args.engine}] served {len(done)}/{args.requests} requests, "
+          f"{toks} tokens in {dt:.1f}s ({toks / dt:.0f} tok/s){extra}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ the dry-run lowers the XLA path.  Blocks also export operator-graph builders
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any
 
@@ -147,22 +148,36 @@ def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
                      constrain=lambda t, _: t, seq_shards: int = 1):
     """Single-token decode with KV cache update.
 
-    cache_k/v: (B, n_kv, S_max, D).  pos: scalar current position.
+    cache_k/v: (B, n_kv, S_max, D).  pos: scalar current position, or a
+    per-slot (B,) vector -- the serving engine's per-slot position clock:
+    each sequence writes its new K/V at its OWN position and attends to
+    exactly its own [0, pos+1) range (a refilled slot never sees the
+    previous occupant's stale entries).
     Returns (out, new_k, new_v).  When the cache's sequence dim is sharded
     (seq_shards > 1), callers wrap this in shard_map and psum-combine the
     (o, m, l) partials -- distributed flash-decode (serve/engine.py).
     """
     b, one, d_model = x.shape
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    per_slot = jnp.ndim(pos) == 1
+    if per_slot:
+        positions = jnp.asarray(pos, jnp.int32)[:, None]
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
     q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
                            constrain)
     # cast to the cache's storage dtype (supports float8 quantized KV)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), pos, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), pos, axis=2)
+    kc = k.transpose(0, 2, 1, 3).astype(cache_k.dtype)
+    vc = v.transpose(0, 2, 1, 3).astype(cache_v.dtype)
+    if per_slot:
+        _upd = jax.vmap(functools.partial(
+            jax.lax.dynamic_update_slice_in_dim, axis=1))
+        ck = _upd(cache_k, kc, pos)
+        cv = _upd(cache_v, vc, pos)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, kc, pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, vc, pos, axis=2)
     qh = q.transpose(0, 2, 1, 3)
-    valid = pos + 1
+    valid = pos + 1                      # scalar or (B,)
     lo = jnp.maximum(0, valid - window) if window is not None else 0
     if kernels.use_pallas and isinstance(window, type(None)):
         o = k_decode(qh, ck, cv, valid_len=valid, cfg=kernels)
@@ -172,10 +187,15 @@ def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
         grp = n_heads // n_kv
         qg = qh.reshape(b, n_kv, grp, head_dim)
         ki = jnp.arange(s_max)
-        maskv = (ki < valid) & (ki >= lo)
+        if per_slot:
+            maskv = ((ki[None, :] < jnp.asarray(valid)[:, None])
+                     & (ki[None, :] >= jnp.asarray(lo)[..., None]))
+            maskv = maskv[:, None, None, :]
+        else:
+            maskv = ((ki < valid) & (ki >= lo))[None, None, None, :]
         sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
                         ck.astype(jnp.float32)) * (head_dim ** -0.5)
-        sc = jnp.where(maskv[None, None, None, :], sc, -1e30)
+        sc = jnp.where(maskv, sc, -1e30)
         pr = jax.nn.softmax(sc, axis=-1)
         o = jnp.einsum("bhgs,bhsd->bhgd", pr,
                        cv.astype(jnp.float32)).astype(x.dtype)

@@ -341,7 +341,9 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 def decode_step(params: dict, token: jax.Array, pos: jax.Array, cache: dict,
                 cfg: ArchConfig, *, kernels: KernelConfig = KernelConfig(),
                 sharder=NULL, moe_cf: float = 1.25) -> tuple[jax.Array, dict]:
-    """token: (B,) int32; pos: scalar int32 (current position).
+    """token: (B,) int32; pos: scalar int32 (current position) or a
+    per-slot (B,) int32 vector (paged serving: each slot writes and attends
+    at its OWN position -- see layers.attention_decode).
     Returns (logits (B, vocab), new_cache)."""
     x = L.embed(params["embed"], token[:, None], scale=True).astype(
         params["embed"].dtype)

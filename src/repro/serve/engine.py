@@ -1,17 +1,39 @@
-"""Batched serving: prefill + decode with a KV cache, continuous-batching
-slot management, and the mesh-distributed decode path.
+"""Serving engines over the dataflow pipeline.
 
-`serve_step` is what the decode_32k / long_500k dry-run cells lower: one new
-token per sequence against a seq_len-deep cache.  KV-cache sharding follows
-distributed/sharding.py: kv-heads -> "model" when divisible, else the cache's
-SEQUENCE dim shards and decode attention becomes the distributed flash-decode
-(per-shard partial (o, m, l) + combine -- kernels.combine_partials over the
-mesh, i.e. the paper's Fig 2(b) reduction tree on ICI).
+Two engine generations live here:
+
+  * `ServingEngine` -- the legacy CONTIGUOUS engine: one (B, max_len) cache,
+    one shared position clock, teacher-forcing one prompt token per tick.
+    Kept as the differential baseline and for the mesh-distributed decode
+    path (KV sharding per distributed/sharding.py).
+
+  * `PagedServingEngine` -- the production engine: the KV cache is a pool of
+    fixed-size pages (block_pool.py) indexed through per-slot block tables,
+    positions are a per-slot (B,) clock threaded down to the decode-attention
+    kernels (each slot attends exactly its own [0, valid) range -- a refilled
+    slot can never see the previous occupant's stale entries), prompts
+    prefill in chunks mixed into decode ticks (scheduler.py), and finished
+    prompts publish their blocks to a prefix cache (prefix_cache.py).
+    Capacity comes from an on-device profiling pass (`PagedKVExecutor`, the
+    vLLM ExecutorBase shape: get_max_allowed_kv_blocks -> initialize_cache).
+
+  * `AsyncServingEngine` wraps the paged engine in a background tick loop:
+    `submit()` returns a streaming `RequestHandle` immediately; `drain()`
+    stops the loop after in-flight work completes.
+
+Every tick -- paged or legacy -- is ONE compiled program over the full slot
+batch, served from the process-wide executable cache, or traced through the
+dataflow pipeline when `ServeConfig.compile_mode` selects an executor
+backend ("kitsune" runs the decode tick on prebound ExecutionPlans).
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+import threading
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -24,6 +46,10 @@ from repro.core.executor import executable_cache
 from repro.distributed.sharding import NULL
 from repro.kernels import KernelConfig
 from repro.models import get_model
+
+from .block_pool import BlockPool, OutOfBlocks
+from .prefix_cache import PrefixCache
+from .scheduler import Request, Scheduler, blocks_for
 
 
 @dataclass(frozen=True)
@@ -48,13 +74,47 @@ class ServeConfig:
     # executables until the per-engine plan LRU (Engine.MAX_PLANS) or the
     # engine itself drops them.
     cache_capacity: int | None = None
+    # -- paged engine knobs -------------------------------------------------
+    block_size: int = 8            # token positions per KV page
+    prefill_chunk: int = 8         # max prompt tokens one slot feeds per tick
+    token_budget: int | None = None  # tokens per tick across the batch
+    num_blocks: int | None = None    # pool size; None -> profiling pass
+    mem_budget_bytes: int | None = None  # profiling budget when no device stats
+    prefix_caching: bool = True
+    # False (default) pins the per-tick KV view at max_blocks: every tick
+    # reduces over the same attention length, which keeps outputs BITWISE
+    # independent of what the other slots are doing (XLA regroups reduction
+    # trees per length, so varying view lengths are value-equal but can flip
+    # a near-tie argmax).  True buckets the view at pow2 block counts: less
+    # wasted gather/attention work per tick, more compiled programs, and
+    # only value-level (not bitwise) batch invariance.
+    view_buckets: bool = False
+    max_new_tokens: int | None = None    # default per-request cap
+
+
+def _apply_cache_capacity(sc: ServeConfig) -> None:
+    """Apply ServeConfig.cache_capacity to the process-wide executable cache,
+    warning when it would SHRINK a larger capacity some other engine set --
+    the knob is global, and silently evicting a co-tenant's executables is
+    exactly the kind of action that should be loud."""
+    if sc.cache_capacity is None:
+        return
+    cache = executable_cache()
+    cur = cache.stats()["capacity"]
+    if cur is not None and sc.cache_capacity < cur:
+        warnings.warn(
+            f"ServeConfig.cache_capacity={sc.cache_capacity} shrinks the "
+            f"process-wide executable cache from capacity {cur}; other "
+            "engines in this process share that cache and may re-lower "
+            "evicted shapes", stacklevel=3)
+    cache.set_capacity(sc.cache_capacity)
 
 
 def serve_step(params, state, cfg: ArchConfig, *,
                kernels: KernelConfig = KernelConfig(), sharder=NULL):
-    """One decode tick for the whole batch.
+    """One decode tick for the whole batch (legacy contiguous engine).
 
-    state = {"tokens": (B,), "pos": scalar, "cache": {...}, "rng": key}
+    state = {"tokens": (B,), "pos": scalar, "cache": {...}}
     Returns new state with sampled next tokens and the updated cache.
     """
     model = get_model(cfg)
@@ -67,17 +127,13 @@ def serve_step(params, state, cfg: ArchConfig, *,
 
 
 class ServingEngine:
-    """Host-side request manager: continuous batching over fixed slots.
+    """Legacy host-side request manager: continuous batching over fixed
+    slots with ONE contiguous (B, max_len) cache and a shared position clock.
 
-    Requests occupy slots; finished slots (EOS or length) are refilled from
-    the queue without stopping the batch -- the decode jit runs every tick on
-    the full slot batch (standard production shape: fixed-batch decode).
-
-    Simplification (documented): slots share one position clock, so a slot
-    refilled mid-stream can attend to the previous occupant's stale cache
-    entries.  Production-grade per-slot position tracking needs a (B,)
-    valid-range mask in decode attention -- the cache layout already
-    supports it; out of scope here."""
+    Kept as the paged engine's differential baseline.  Its known limitation
+    -- a slot refilled mid-stream attends the previous occupant's stale
+    cache entries because all slots share one position -- is exactly what
+    `PagedServingEngine`'s per-slot valid-range tracking fixes."""
 
     def __init__(self, cfg: ArchConfig, params, sc: ServeConfig, *,
                  kernels: KernelConfig = KernelConfig(), sharder=NULL,
@@ -89,16 +145,13 @@ class ServingEngine:
         self.kernels = kernels
         self.sharder = sharder
         self.eos = eos_id
-        self.queue: list[tuple[int, list[int]]] = []   # (request_id, prompt)
+        self.queue: deque[tuple[int, list[int]]] = deque()  # (request_id, prompt)
         self.slots: list[dict | None] = [None] * sc.batch
         self.done: dict[int, list[int]] = {}
         self.cache = self.model.init_cache(sc.batch, sc.max_len)
         self.tokens = jnp.zeros((sc.batch,), jnp.int32)
         self.pos = jnp.zeros((), jnp.int32)
-        if sc.cache_capacity is not None:
-            # bound the shared executable store (thread-safe LRU): serving
-            # processes otherwise accumulate one entry per shape forever
-            executable_cache().set_capacity(sc.cache_capacity)
+        _apply_cache_capacity(sc)
         # Decode tick through the compiler's executable cache: the first
         # tick per (batch, cache shape) lowers+compiles; every later tick --
         # and every later engine with the same config -- reuses the cached
@@ -128,7 +181,7 @@ class ServingEngine:
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
-                rid, prompt = self.queue.pop(0)
+                rid, prompt = self.queue.popleft()
                 self.slots[i] = {"id": rid, "prompt": prompt, "out": [],
                                  "fed": 0}
 
@@ -169,3 +222,660 @@ class ServingEngine:
             if self.tick() == 0:
                 break
         return self.done
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+class RequestHandle:
+    """Future/stream for one submitted request.
+
+    `tokens()` snapshots what has been generated so far (streaming);
+    `result()` blocks until completion and returns the full output, raising
+    if the request was rejected or failed."""
+
+    def __init__(self, rid: int, prompt: list[int]):
+        self.rid = rid
+        self.prompt = prompt
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self._tokens: list[int] = []
+        self._error: BaseException | None = None
+
+    def _append(self, tok: int) -> None:
+        with self._lock:
+            self._tokens.append(tok)
+
+    def _finish(self) -> None:
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def tokens(self) -> list[int]:
+        with self._lock:
+            return list(self._tokens)
+
+    def result(self, timeout: float | None = None) -> list[int]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still running")
+        if self._error is not None:
+            raise self._error
+        return self.tokens()
+
+
+# batch axis of each recurrent (non-KV) cache entry, per models/lm.init_cache
+_AUX_BATCH_AXIS = {"ssm": 1, "mC": 2, "mn": 2, "mm": 2,
+                   "sc": 2, "sn": 2, "sm": 2}
+
+
+def paged_tick(params, state, cfg: ArchConfig, *,
+               kernels: KernelConfig = KernelConfig(), sharder=NULL,
+               block_size: int, n_steps: int):
+    """One unified serving tick over paged KV: gather a dense per-slot view
+    from the page pool, run `n_steps` decode steps with per-slot activity
+    masks (chunked prefill and decode mixed in one program), scatter the
+    newly written positions back to their pages.
+
+    state:
+      tokens (B, n_steps) int32  input token per slot per step (padded)
+      n_tok  (B,) int32          active steps per slot; 0 = idle slot
+      pos    (B,) int32          per-slot write position at tick start
+      tables (B, V) int32        physical page id per logical block
+      kp/vp  (P, G, A, Hkv, D)   flat page pools (P = (num_blocks+1) * bs;
+                                 row block 0 is the reserved null page)
+      + recurrent entries (ssm/mC/...) keyed as in models init_cache
+
+    Bitwise contract: a slot's outputs depend only on ITS OWN fed tokens.
+    Masked-out steps write at a stationary position that a later active step
+    either overwrites or the scatter skips; view positions beyond a slot's
+    valid length score exp(-1e30 - m) == 0.0 exactly in f32, so neither
+    other slots' activity nor the view padding perturbs a single bit.
+    """
+    model = get_model(cfg)
+    tokens, n_tok, pos = state["tokens"], state["n_tok"], state["pos"]
+    b = tokens.shape[0]
+    bs = block_size
+    has_kv = "kp" in state
+    cache: dict[str, Any] = {}
+    if has_kv:
+        kp, vp, tables = state["kp"], state["vp"], state["tables"]
+        v_blocks = tables.shape[1]
+        view_len = v_blocks * bs
+        # logical view rows -> flat page rows: block id * bs + offset
+        rows = (tables[:, :, None] * bs
+                + jnp.arange(bs, dtype=tables.dtype)[None, None, :]
+                ).reshape(b, view_len)
+        # (B, L, G, A, H, D) -> (G, A, B, H, L, D): the layout decode expects
+        cache["k"] = kp[rows].transpose(2, 3, 0, 4, 1, 5)
+        cache["v"] = vp[rows].transpose(2, 3, 0, 4, 1, 5)
+    for name in _AUX_BATCH_AXIS:
+        if name in state:
+            cache[name] = state[name]
+
+    pos0 = pos
+    logits = None
+    for j in range(n_steps):
+        active = j < n_tok
+        lg, new = model.decode_step(params, tokens[:, j], pos, cache,
+                                    kernels=kernels, sharder=sharder)
+        if has_kv:
+            # inactive slots wrote garbage at their stationary pos: either a
+            # later active step overwrites it or the scatter below skips it
+            cache["k"], cache["v"] = new["k"], new["v"]
+        for name, ax in _AUX_BATCH_AXIS.items():
+            if name in cache:
+                shp = [1] * cache[name].ndim
+                shp[ax] = b
+                cache[name] = jnp.where(active.reshape(shp), new[name],
+                                        cache[name])
+        logits = lg if logits is None else jnp.where(active[:, None], lg,
+                                                     logits)
+        pos = jnp.where(active, pos + 1, pos)
+
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = {"tokens_next": nxt, "logits": logits, "pos": pos}
+    if has_kv:
+        # scatter the C freshly written view columns back to their pages;
+        # invalid (beyond n_tok) columns redirect to the null page row 0
+        steps = jnp.arange(n_steps, dtype=pos0.dtype)
+        wpos = pos0[:, None] + steps[None, :]                  # (B, C)
+        wvalid = steps[None, :] < n_tok[:, None]
+        phys = jnp.take_along_axis(
+            tables, jnp.minimum(wpos // bs, v_blocks - 1), axis=1)
+        flat = jnp.where(wvalid, phys * bs + wpos % bs, 0).reshape(-1)
+        cols = jnp.minimum(wpos, view_len - 1)[None, None, :, None, :, None]
+        kc = jnp.take_along_axis(cache["k"], cols, axis=4)     # (G,A,B,H,C,D)
+        vc = jnp.take_along_axis(cache["v"], cols, axis=4)
+        kc = kc.transpose(2, 4, 0, 1, 3, 5).reshape(b * n_steps, *kp.shape[1:])
+        vc = vc.transpose(2, 4, 0, 1, 3, 5).reshape(b * n_steps, *vp.shape[1:])
+        out["kp"] = kp.at[flat].set(kc.astype(kp.dtype))
+        out["vp"] = vp.at[flat].set(vc.astype(vp.dtype))
+    for name in _AUX_BATCH_AXIS:
+        if name in cache:
+            out[name] = cache[name]
+    return out
+
+
+class PagedKVExecutor:
+    """Capacity owner for the paged engine, in the vLLM ExecutorBase shape:
+    `get_max_allowed_kv_blocks()` runs a profiling pass (parameter bytes +
+    compiled-tick working set against the device budget), the engine decides
+    the final count, `initialize_cache(n)` materializes the page pools."""
+
+    DEFAULT_BUDGET = 256 * 1024 * 1024   # no device stats (CPU): 256 MiB
+
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig, *,
+                 kernels: KernelConfig = KernelConfig(), sharder=NULL):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.kernels = kernels
+        self.sharder = sharder
+        template = get_model(cfg).init_cache(1, sc.block_size)
+        if "k" not in template:
+            raise ValueError(f"{cfg.name}: no KV cache to page")
+        g, a, _, h, _, d = template["k"].shape
+        self.page_shape = (g, a, h, d)
+        self.kv_dtype = template["k"].dtype
+        self.max_blocks = blocks_for(sc.max_len, sc.block_size)
+        # bytes of ONE logical block: its K page + its V page
+        self.block_bytes = 2 * sc.block_size * g * a * h * d \
+            * jnp.dtype(self.kv_dtype).itemsize
+
+    def _device_budget(self) -> int:
+        if self.sc.mem_budget_bytes is not None:
+            return self.sc.mem_budget_bytes
+        try:
+            stats = jax.local_devices()[0].memory_stats() or {}
+            limit = stats.get("bytes_limit")
+            if limit:
+                return int(limit)
+        except Exception:
+            pass
+        return self.DEFAULT_BUDGET
+
+    def profile_run(self) -> int:
+        """Working-set bytes of one compiled decode tick (C=1, 1-block view,
+        probe-sized pool) -- the activation term of the capacity model."""
+        sc = self.sc
+        probe = functools.partial(paged_tick, cfg=self.cfg,
+                                  kernels=self.kernels, sharder=self.sharder,
+                                  block_size=sc.block_size, n_steps=1)
+        state = self._abstract_state(n_steps=1, v_blocks=1, num_blocks=1)
+        p_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+            self.params)
+        try:
+            compiled = jax.jit(probe).lower(p_abs, state).compile()
+            mem = compiled.memory_analysis()
+            return int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        except Exception:
+            return 0
+
+    def _abstract_state(self, *, n_steps: int, v_blocks: int,
+                        num_blocks: int) -> dict:
+        sc = self.sc
+        b = sc.batch
+        g, a, h, d = self.page_shape
+        pool_rows = (num_blocks + 1) * sc.block_size
+        st = {"tokens": jax.ShapeDtypeStruct((b, n_steps), jnp.int32),
+              "n_tok": jax.ShapeDtypeStruct((b,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+              "tables": jax.ShapeDtypeStruct((b, v_blocks), jnp.int32),
+              "kp": jax.ShapeDtypeStruct((pool_rows, g, a, h, d),
+                                         self.kv_dtype),
+              "vp": jax.ShapeDtypeStruct((pool_rows, g, a, h, d),
+                                         self.kv_dtype)}
+        aux = get_model(self.cfg).init_cache(b, 1)
+        for name in _AUX_BATCH_AXIS:
+            if name in aux:
+                st[name] = jax.ShapeDtypeStruct(aux[name].shape,
+                                                aux[name].dtype)
+        return st
+
+    def get_max_allowed_kv_blocks(self) -> tuple[int, int]:
+        """(device_blocks, swap_blocks).  device_blocks = what fits in the
+        budget after parameters and the tick working set; floored at
+        max_blocks + batch so a full-length request plus one block per slot
+        always fits.  No host swap tier here, so swap_blocks is 0."""
+        budget = self._device_budget()
+        param_bytes = sum(int(np.prod(jnp.shape(x)))
+                          * jnp.asarray(x).dtype.itemsize
+                          for x in jax.tree_util.tree_leaves(self.params))
+        act_bytes = self.profile_run()
+        n = (budget - param_bytes - act_bytes) // self.block_bytes
+        floor = self.max_blocks + self.sc.batch
+        return max(int(n), floor), 0
+
+    def initialize_cache(self, num_blocks: int) -> tuple[jax.Array, jax.Array]:
+        """Materialize the K and V page pools: row block 0 is the reserved
+        null page, usable pages are rows [bs, (num_blocks+1)*bs)."""
+        g, a, h, d = self.page_shape
+        rows = (num_blocks + 1) * self.sc.block_size
+        kp = jnp.zeros((rows, g, a, h, d), self.kv_dtype)
+        return kp, jnp.zeros_like(kp)
+
+
+class PagedServingEngine:
+    """Block-paged continuous batching with per-slot position tracking.
+
+    Each slot carries its own (pos, block-table row); the decode kernels see
+    a per-slot (B,) valid-length vector, so a slot refilled mid-stream is
+    bitwise-identical to serving its request alone.  Prompts prefill in
+    budget-bounded chunks mixed into decode ticks; finished prompts publish
+    their KV pages to the prefix cache for later requests to reuse."""
+
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig, *,
+                 kernels: KernelConfig = KernelConfig(), sharder=NULL,
+                 eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.model = get_model(cfg)
+        self.kernels = kernels
+        self.sharder = sharder
+        self.eos = eos_id
+        if cfg.family == "encdec":
+            raise ValueError("paged serving covers decoder-only families")
+        _apply_cache_capacity(sc)
+
+        b = sc.batch
+        full = self.model.init_cache(b, 1)
+        self.aux_init = {k: v for k, v in full.items() if k not in ("k", "v")}
+        self.aux = dict(self.aux_init)
+        self.has_kv = "k" in full
+        self.max_blocks = blocks_for(sc.max_len, sc.block_size)
+        if self.has_kv:
+            self.executor = PagedKVExecutor(cfg, params, sc, kernels=kernels,
+                                            sharder=sharder)
+            if sc.num_blocks is not None:
+                num = sc.num_blocks
+            else:
+                num, _ = self.executor.get_max_allowed_kv_blocks()
+            self.kp, self.vp = self.executor.initialize_cache(num)
+            self.pool = BlockPool(
+                num, sc.block_size,
+                on_evict=lambda key, bid: self.prefix.on_evict(key, bid))
+            self.prefix = PrefixCache(self.pool)
+            self.tables = np.zeros((b, self.max_blocks), np.int32)
+        else:
+            self.executor = None
+            self.pool = None
+            self.prefix = None
+            self.tables = None
+        # prefix reuse is only sound when KV pages are the WHOLE model state:
+        # recurrent families would need the matching ssm/lstm state too
+        self.prefix_enabled = (sc.prefix_caching and self.has_kv
+                               and not self.aux_init)
+
+        self.scheduler = Scheduler(block_size=sc.block_size,
+                                   prefill_chunk=sc.prefill_chunk,
+                                   token_budget=sc.token_budget,
+                                   n_slots=b)
+        self.slots: list[dict | None] = [None] * b
+        self.pos = np.zeros(b, np.int64)
+        self.done: dict[int, list[int]] = {}
+        self.handles: dict[int, RequestHandle] = {}
+        self._rid = 0
+        self._steps: dict[tuple[int, int], Any] = {}
+        self._view_buckets = self._make_view_buckets()
+        self.ticks = 0
+        self.tokens_out = 0
+        self.peak_active = 0
+
+    # -- geometry ----------------------------------------------------------
+    def _make_view_buckets(self) -> list[int]:
+        if not self.has_kv:
+            return [0]
+        if not self.sc.view_buckets:
+            return [self.max_blocks]
+        buckets, v = [], 1
+        while v < self.max_blocks:
+            buckets.append(v)
+            v *= 2
+        buckets.append(self.max_blocks)
+        return buckets
+
+    def _view_for(self, need_blocks: int) -> int:
+        for v in self._view_buckets:
+            if v >= need_blocks:
+                return v
+        return self._view_buckets[-1]
+
+    # -- compiled tick per (chunk width, view) bucket ----------------------
+    def _get_step(self, n_steps: int, v_blocks: int):
+        key = (n_steps, v_blocks)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        sc = self.sc
+        base = functools.partial(paged_tick, cfg=self.cfg,
+                                 kernels=self.kernels, sharder=self.sharder,
+                                 block_size=sc.block_size, n_steps=n_steps)
+        # The tick state (kp/vp pools, aux, per-tick tokens/pos/tables) is
+        # dead after every call -- the engine rebinds all of it from the
+        # step's outputs -- so donate it: XLA aliases the KV pools and the
+        # scatter-back updates pages IN PLACE instead of copying the whole
+        # pool each tick (the pool can be most of device memory).
+        if sc.compile_mode is not None:
+            import repro
+            example = self._example_state(n_steps, v_blocks)
+            fn = repro.compile(base, (self.params, example),
+                               mode=sc.compile_mode, donate_argnums=(1,))
+        else:
+            num = self.pool.num_blocks if self.pool else 0
+            fn = cached_jit(
+                base,
+                key=("paged_tick", self.cfg.name, sc.batch, sc.block_size,
+                     n_steps, v_blocks, num, repr(self.kernels),
+                     str(getattr(self.sharder, "mesh", "null"))),
+                donate_argnums=(1,))
+        self._steps[key] = fn
+        return fn
+
+    def _example_state(self, n_steps: int, v_blocks: int) -> dict:
+        b = self.sc.batch
+        st = {"tokens": jnp.zeros((b, n_steps), jnp.int32),
+              "n_tok": jnp.zeros((b,), jnp.int32),
+              "pos": jnp.zeros((b,), jnp.int32)}
+        if self.has_kv:
+            st["tables"] = jnp.zeros((b, v_blocks), jnp.int32)
+            st["kp"], st["vp"] = self.kp, self.vp
+        st.update(self.aux)
+        return st
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, prompt: list[int], rid: int | None = None,
+               max_new_tokens: int | None = None) -> RequestHandle:
+        if rid is None:
+            self._rid += 1
+            rid = self._rid
+        handle = RequestHandle(rid, list(prompt))
+        self.handles[rid] = handle
+        req = Request(rid=rid, prompt=list(prompt), handle=handle,
+                      max_new=max_new_tokens or self.sc.max_new_tokens)
+        if len(prompt) >= self.sc.max_len:
+            self.scheduler.rejected += 1
+            handle._fail(ValueError(
+                f"prompt of {len(prompt)} tokens >= max_len {self.sc.max_len}"))
+            return handle
+        if self.pool is not None and \
+                self.scheduler.admission_cost(req) > self.pool.num_blocks:
+            self.scheduler.rejected += 1
+            handle._fail(ValueError(
+                f"request needs {self.scheduler.admission_cost(req)} blocks; "
+                f"pool holds {self.pool.num_blocks}"))
+            return handle
+        self.scheduler.submit(req)
+        return handle
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        resets = []
+        for i in free:
+            req = self.scheduler.next_admission(self.pool)
+            if req is None:
+                break
+            reused_bids: list[int] = []
+            reused = 0
+            if self.prefix_enabled and not req.resume_out:
+                reused_bids, reused = self.prefix.match(req.prompt)
+            if self.tables is not None:
+                self.tables[i, :] = 0
+                self.tables[i, :len(reused_bids)] = reused_bids
+            self.slots[i] = {
+                "rid": req.rid, "req": req, "prompt": req.prompt,
+                "seq": req.feed, "out": list(req.resume_out),
+                "fed": reused, "nblocks": len(reused_bids), "last": None,
+                "handle": req.handle, "max_new": req.max_new,
+                "admit_seq": self.scheduler.admit_seq,
+            }
+            self.pos[i] = reused
+            resets.append(i)
+        if resets and self.aux_init:
+            # reinitialize recurrent state for refilled slots only
+            mask = np.zeros(self.sc.batch, bool)
+            mask[resets] = True
+            m = jnp.asarray(mask)
+            for name, init in self.aux_init.items():
+                ax = _AUX_BATCH_AXIS[name]
+                shp = [1] * init.ndim
+                shp[ax] = self.sc.batch
+                self.aux[name] = jnp.where(m.reshape(shp), init,
+                                           self.aux[name])
+
+    def _release(self, i: int, *, cache_prefix: bool) -> None:
+        slot = self.slots[i]
+        if self.pool is not None:
+            bids = [int(b) for b in self.tables[i, :slot["nblocks"]]]
+            if cache_prefix and self.prefix_enabled:
+                self.prefix.insert(slot["prompt"], bids)
+            for bid in bids:
+                self.pool.decref(bid)
+            self.tables[i, :] = 0
+        self.pos[i] = 0
+        self.slots[i] = None
+
+    def _preempt(self, i: int) -> None:
+        """Preemption-by-recompute: tear the slot down, requeue its request
+        (prompt + generated-so-far) at the queue head.  Greedy decoding
+        makes the recompute bitwise-exact, so the handle keeps streaming."""
+        slot = self.slots[i]
+        req = slot["req"]
+        req.resume_out = list(slot["out"])
+        self._release(i, cache_prefix=False)
+        if self.pool is not None and \
+                self.scheduler.admission_cost(req) > self.pool.num_blocks:
+            self.scheduler.rejected += 1
+            req.handle._fail(OutOfBlocks(
+                f"request {req.rid} grew past pool capacity"))
+            return
+        self.scheduler.requeue(req)
+
+    def _ensure_blocks(self, n_tok: list[int]) -> None:
+        """Allocate pages so every slot's table covers pos + n_tok this
+        tick; on exhaustion, preempt the newest slot and retry (the slot
+        being grown preempts ITSELF when it is the newest)."""
+        if self.pool is None:
+            return
+        order = sorted((s["admit_seq"], i)
+                       for i, s in enumerate(self.slots) if s is not None)
+        for _, i in order:
+            slot = self.slots[i]
+            if slot is None or n_tok[i] == 0:
+                continue
+            need = blocks_for(int(self.pos[i]) + n_tok[i], self.sc.block_size)
+            while slot["nblocks"] < need:
+                try:
+                    bid = self.pool.alloc()
+                except OutOfBlocks:
+                    victim = self.scheduler.pick_victim(self.slots)
+                    if victim is None:
+                        raise
+                    self._preempt(victim)
+                    n_tok[victim] = 0
+                    if victim == i:
+                        break
+                    continue
+                self.tables[i, slot["nblocks"]] = bid
+                slot["nblocks"] += 1
+
+    # -- the tick ----------------------------------------------------------
+    def tick(self) -> int:
+        """One engine tick; returns #requests still in flight afterwards."""
+        self._admit()
+        n_tok = self.scheduler.plan(self.slots)
+        self._ensure_blocks(n_tok)
+        active = [i for i, t in enumerate(n_tok) if t > 0]
+        if not active:
+            return sum(s is not None for s in self.slots) \
+                + len(self.scheduler.waiting)
+        self.peak_active = max(self.peak_active,
+                               sum(s is not None for s in self.slots))
+
+        c = 1 if max(n_tok) <= 1 else self.scheduler.chunk
+        tokens = np.zeros((self.sc.batch, c), np.int32)
+        for i in active:
+            slot = self.slots[i]
+            t = n_tok[i]
+            if slot["fed"] < len(slot["seq"]):
+                tokens[i, :t] = slot["seq"][slot["fed"]:slot["fed"] + t]
+            else:
+                tokens[i, 0] = slot["last"]
+        state = {"tokens": jnp.asarray(tokens),
+                 "n_tok": jnp.asarray(np.asarray(n_tok, np.int32)),
+                 "pos": jnp.asarray(self.pos.astype(np.int32))}
+        if self.has_kv:
+            need = max(blocks_for(int(self.pos[i]) + n_tok[i],
+                                  self.sc.block_size) for i in active)
+            v_blocks = self._view_for(need)
+            state["tables"] = jnp.asarray(self.tables[:, :v_blocks])
+            state["kp"], state["vp"] = self.kp, self.vp
+        else:
+            v_blocks = 0
+        state.update(self.aux)
+
+        with warnings.catch_warnings():
+            # donating the whole tick state is deliberate over-asking: the
+            # small int32 feeds (tokens/pos/tables) can't alias because the
+            # outputs they'd pair with differ in shape; only the kp/vp pool
+            # aliasing matters, and jax's per-compile "not usable" warning
+            # about the rest is expected noise
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            out = self._get_step(c, v_blocks)(self.params, state)
+
+        if self.has_kv:
+            self.kp, self.vp = out["kp"], out["vp"]
+        for name in self.aux:
+            self.aux[name] = out[name]
+        nxt = np.asarray(out["tokens_next"])
+        self.pos = np.asarray(out["pos"], np.int64).copy()
+        self.ticks += 1
+
+        for i in active:
+            slot = self.slots[i]
+            slot["fed"] += n_tok[i]
+            if slot["fed"] < len(slot["seq"]):
+                continue                        # still prefilling
+            tok = int(nxt[i])
+            slot["out"].append(tok)
+            slot["last"] = tok
+            slot["handle"]._append(tok)
+            self.tokens_out += 1
+            limit = self.sc.max_len - len(slot["prompt"]) - 1
+            if slot["max_new"] is not None:
+                limit = min(limit, slot["max_new"])
+            if tok == self.eos or len(slot["out"]) >= limit:
+                self.done[slot["rid"]] = slot["out"]
+                slot["handle"]._finish()
+                self._release(i, cache_prefix=True)
+        return sum(s is not None for s in self.slots) \
+            + len(self.scheduler.waiting)
+
+    def pending(self) -> int:
+        return sum(s is not None for s in self.slots) \
+            + len(self.scheduler.waiting)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
+        for _ in range(max_ticks):
+            if self.tick() == 0:
+                break
+        return self.done
+
+    def stats(self) -> dict:
+        s = {"ticks": self.ticks, "tokens_out": self.tokens_out,
+             "peak_active": self.peak_active,
+             "scheduler": self.scheduler.stats(),
+             "step_programs": len(self._steps)}
+        if self.pool is not None:
+            s["pool"] = self.pool.check()
+        if self.prefix_enabled:
+            s["prefix_cache"] = self.prefix.stats()
+        return s
+
+
+class AsyncServingEngine:
+    """Background tick loop around a PagedServingEngine.
+
+    `submit()` enqueues from any thread and returns the streaming handle
+    immediately; a daemon thread ticks whenever work is pending and parks on
+    a condition variable when idle.  `drain()` waits for in-flight requests
+    to finish and stops the loop; the engine can also be used as a context
+    manager (`with AsyncServingEngine(...) as eng: ...` drains on exit)."""
+
+    def __init__(self, cfg: ArchConfig | None = None, params=None,
+                 sc: ServeConfig | None = None, *,
+                 engine: PagedServingEngine | None = None, **kw):
+        if engine is None:
+            engine = PagedServingEngine(cfg, params, sc, **kw)
+        self.engine = engine
+        self._cond = threading.Condition()
+        self._running = False
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "AsyncServingEngine":
+        with self._cond:
+            if self._running:
+                return self
+            self._running = True
+            self._thread = threading.Thread(target=self._loop,
+                                            name="serve-tick", daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while self._running and self.engine.pending() == 0:
+                    self._cond.notify_all()          # wake drain() waiters
+                    self._cond.wait(timeout=0.05)
+                if not self._running:
+                    self._cond.notify_all()
+                    return
+            # tick OUTSIDE the lock: submissions only append to the
+            # scheduler's deque, which tick consumes on its next admission
+            self.engine.tick()
+
+    def submit(self, prompt: list[int], rid: int | None = None,
+               max_new_tokens: int | None = None) -> RequestHandle:
+        if self._thread is None:
+            self.start()
+        with self._cond:
+            handle = self.engine.submit(prompt, rid=rid,
+                                        max_new_tokens=max_new_tokens)
+            self._cond.notify_all()
+        return handle
+
+    def drain(self, timeout: float | None = None) -> dict[int, list[int]]:
+        """Graceful stop: wait for all in-flight work, then halt the loop."""
+        t0 = time.monotonic()
+        while self.engine.pending() > 0:
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError("drain timed out with work pending")
+            time.sleep(0.001)
+        self.close()
+        return self.engine.done
+
+    def close(self) -> None:
+        with self._cond:
+            self._running = False
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def __enter__(self) -> "AsyncServingEngine":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.drain()
+        else:
+            self.close()
