@@ -103,7 +103,7 @@ def measured_e2e(csv=True, iters=10):
     rows = {}
     for name, (g, feeds) in tiny_instances().items():
         params = init_params(g, jax.random.PRNGKey(0))
-        row = {}
+        row = {"flops": float(g.total_flops())}
         for label, opts in variants.items():
             app = repro.compile(g, opts)
             rep = app.run(feeds, params)     # warm: plan built, traffic read
@@ -116,6 +116,8 @@ def measured_e2e(csv=True, iters=10):
                 "bytes": rep.bytes_accessed,
                 "programs": rep.n_programs,
             }
+            if label == "kitsune":
+                row["lowering_verdicts"] = app.lowering_verdicts()
         row["traffic_reduction"] = 1.0 - (row["kitsune"]["bytes"]
                                           / max(row["bsp"]["bytes"], 1.0))
         row["wall_speedup_vs_bsp"] = (row["bsp"]["us_per_call"]
@@ -130,6 +132,21 @@ def measured_e2e(csv=True, iters=10):
                   f";programs={row['kitsune']['programs']}"
                   f"/{row['bsp']['programs']}")
     return rows
+
+
+def calibration_from_measured(rows):
+    """Fit HwSpec.eff / launch_s to the measured BSP wall-clock of the tiny
+    apps (costmodel.calibrate): one (flops, bytes, n_programs, seconds)
+    sample per app.  Returns {"eff", "launch_s", "hw"} for the bench
+    report -- on CPU the fit is honest about interpret/dispatch overheads,
+    which is exactly what compile-time verdicts must predict."""
+    from repro.core import calibrate
+    samples = [(row["flops"], row["bsp"]["bytes"], row["bsp"]["programs"],
+                row["bsp"]["us_per_call"] / 1e6)
+               for row in rows.values() if "bsp" in row]
+    hw = calibrate(HW, samples)
+    return {"eff": hw.eff, "launch_s": hw.launch_s, "hw": hw.name,
+            "n_samples": len(samples)}
 
 
 def _graph_train_step(g):

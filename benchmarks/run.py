@@ -3,13 +3,81 @@ Prints ``name,us_per_call,derived`` CSV lines.
 
 ``--smoke`` runs a tiny-shape subset (apps e2e/coverage + two traced
 config-zoo architectures) and writes the results as JSON -- the CI artifact
-that accumulates a BENCH_*.json trajectory across commits."""
+that accumulates a BENCH_*.json trajectory across commits.  Since schema 4
+the smoke run also REGRESSION-CHECKS lowering: per measured app,
+`kitsune.us_per_call` must not exceed `kitsune_nolower.us_per_call` beyond
+a noise tolerance (the cost/measurement verdicts in core/lower.py exist to
+guarantee this); violations print a diff table and exit nonzero."""
 from __future__ import annotations
 
 import json
 import sys
 import time
 import traceback
+
+# Noise tolerance for the lowering regression gate: tiny-instance CPU
+# timings jitter, so "no slower" means within max(rel_tol fraction,
+# abs_tol_us microseconds) of the unlowered wall-clock.
+LOWERING_REL_TOL = 0.25
+LOWERING_ABS_TOL_US = 30.0
+
+
+def check_lowering_regressions(apps_measured: dict,
+                               rel_tol: float = LOWERING_REL_TOL,
+                               abs_tol_us: float = LOWERING_ABS_TOL_US,
+                               ) -> dict:
+    """Per-app lowering wall-clock gate over measured_e2e rows.
+
+    Returns {"violations": [...], "table": [...], "rel_tol", "abs_tol_us"};
+    a violation row means lowering made the app slower than the tolerance
+    allows -- the verdict mechanism failed to decline an unprofitable site."""
+    table, violations = [], []
+    for name, row in sorted(apps_measured.items()):
+        if "kitsune" not in row or "kitsune_nolower" not in row:
+            continue
+        kit = row["kitsune"]["us_per_call"]
+        nol = row["kitsune_nolower"]["us_per_call"]
+        limit = nol * (1.0 + rel_tol) + abs_tol_us
+        entry = {"app": name, "kitsune_us": round(kit, 1),
+                 "nolower_us": round(nol, 1), "limit_us": round(limit, 1),
+                 "ok": kit <= limit}
+        table.append(entry)
+        if not entry["ok"]:
+            violations.append(entry)
+    return {"violations": violations, "table": table,
+            "rel_tol": rel_tol, "abs_tol_us": abs_tol_us}
+
+
+def _verdict_table_md(apps_measured: dict) -> str:
+    """Markdown per-site verdict table (BENCH_verdicts.md CI artifact)."""
+    lines = ["# Lowering verdicts (smoke run)", "",
+             "| app | pipeline | kernel | decision | source | "
+             "est k/c (us) | meas k/c (us) |",
+             "|---|---|---|---|---|---|---|"]
+
+    def fmt(a, b):
+        if a is None and b is None:
+            return "-"
+        f = lambda x: f"{x:.1f}" if x is not None else "?"
+        return f"{f(a)} / {f(b)}"
+
+    for name, row in sorted(apps_measured.items()):
+        for v in row.get("lowering_verdicts", []):
+            lines.append(
+                f"| {name} | {v['pipeline']} | {v['kernel']} "
+                f"| {v['decision']} | {v['source']} "
+                f"| {fmt(v['est_kernel_us'], v['est_closure_us'])} "
+                f"| {fmt(v['meas_kernel_us'], v['meas_closure_us'])} |")
+    return "\n".join(lines) + "\n"
+
+
+def _print_check(check: dict) -> None:
+    print("# lowering regression gate "
+          f"(rel_tol={check['rel_tol']}, abs_tol_us={check['abs_tol_us']}):")
+    for e in check["table"]:
+        mark = "ok " if e["ok"] else "REGRESSION"
+        print(f"#   {mark} {e['app']}: kitsune={e['kitsune_us']}us "
+              f"nolower={e['nolower_us']}us limit={e['limit_us']}us")
 
 
 def smoke(out_path: str = "BENCH_smoke.json") -> dict:
@@ -43,8 +111,10 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     # request stream; tracks tokens/s, tick p50/p99, and the concurrency
     # headroom paging buys (peak_active vs legacy slot count)
     serve = bench_serve.main(csv=False)
+    check = check_lowering_regressions(apps_measured)
+    calibration = bench_e2e.calibration_from_measured(apps_measured)
     results = {
-        "schema": 3,
+        "schema": 4,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -57,9 +127,15 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "zoo_coverage": zoo_cov,
         "dispatch_overhead": dispatch,
         "serve": serve,
+        "hw_calibration": calibration,
+        "lowering_check": check,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
+    stem = out_path.rsplit(".", 1)[0]
+    verdict_path = stem.replace("_smoke", "") + "_verdicts.md"
+    with open(verdict_path, "w") as f:
+        f.write(_verdict_table_md(apps_measured))
     train_red = {n: round(r["traffic_reduction"], 2)
                  for n, r in apps_train.items()}
     print(f"# smoke results -> {out_path} "
@@ -68,6 +144,10 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
           f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x, "
           f"serve_paged={serve['paged']['tok_s']:.0f}tok/s "
           f"{serve['speedup']:.2f}x legacy)")
+    print(f"# verdict table -> {verdict_path} "
+          f"(calibrated eff={calibration['eff']:.2e}, "
+          f"launch_s={calibration['launch_s']:.2e})")
+    _print_check(check)
     return results
 
 
@@ -80,7 +160,16 @@ def main() -> None:
                     help="JSON path for --smoke results")
     ns = ap.parse_args()
     if ns.smoke:
-        smoke(ns.out)
+        results = smoke(ns.out)
+        violations = results["lowering_check"]["violations"]
+        if violations:
+            print("# LOWERING REGRESSIONS (kitsune slower than "
+                  "kitsune_nolower beyond tolerance):")
+            for e in violations:
+                print(f"#   {e['app']}: kitsune={e['kitsune_us']}us > "
+                      f"limit={e['limit_us']}us "
+                      f"(nolower={e['nolower_us']}us)")
+            sys.exit(1)
         return
     from . import (bench_coverage, bench_dispatch, bench_e2e, bench_kernels,
                    bench_queue, bench_roofline, bench_sensitivity,

@@ -23,7 +23,8 @@ from .pipeline import (design_pipeline, split_reductions, plan_queues,
 from .balance import solve_allocation, balance, BalanceResult
 from .costmodel import (
     A100, V5E, HwSpec, v5e_mesh, evaluate, cost_bsp, cost_vertical,
-    cost_kitsune, roofline, RooflineTerms, utilization_quadrants,
+    cost_kitsune, cost_kernel_site, calibrate, roofline, RooflineTerms,
+    utilization_quadrants,
     PEAK_FLOPS_PER_CHIP, HBM_BW_PER_CHIP, ICI_BW_PER_LINK,
 )
 from .queue import (
@@ -34,9 +35,10 @@ from .executor import (GraphExecutor, ExecutorBackend, BSPBackend,
                        VerticalBackend, KitsuneBackend, make_backend,
                        ExecutionReport, ExecutionPlan, init_params,
                        compare_traffic, executable_cache,
-                       clear_executable_cache, lowering_count)
-from .lower import (KernelMatch, LoweringPlan, PipelineLowering,
-                    lower_pipelines)
+                       clear_executable_cache, lowering_count,
+                       verdict_cache, clear_verdict_cache)
+from .lower import (KernelMatch, LoweringPlan, PipelineLowering, Verdict,
+                    lower_pipeline, lower_pipelines)
 from .trace import (trace, TracedFunction, atomic, attention_flops,
                     jaxpr_flops)
 from .compiler import (CompilerOptions, CompiledApp, CompileState,
@@ -51,15 +53,17 @@ __all__ = [
     "PipelinedGraph", "Pipeline", "Stage", "QueueSpec",
     "solve_allocation", "balance", "BalanceResult",
     "A100", "V5E", "HwSpec", "v5e_mesh", "evaluate", "cost_bsp",
-    "cost_vertical", "cost_kitsune", "roofline", "RooflineTerms",
-    "utilization_quadrants",
+    "cost_vertical", "cost_kitsune", "cost_kernel_site", "calibrate",
+    "roofline", "RooflineTerms", "utilization_quadrants",
     "queue_bandwidth", "VMEM_QUEUE", "ICI_QUEUE", "L2_QUEUE_A100",
     "spatial_pipeline", "make_spatial_pipeline", "ring_push",
     "GraphExecutor", "ExecutorBackend", "BSPBackend", "VerticalBackend",
     "KitsuneBackend", "make_backend", "ExecutionReport", "ExecutionPlan",
     "init_params", "compare_traffic", "executable_cache",
     "clear_executable_cache", "lowering_count",
-    "KernelMatch", "LoweringPlan", "PipelineLowering", "lower_pipelines",
+    "verdict_cache", "clear_verdict_cache",
+    "KernelMatch", "LoweringPlan", "PipelineLowering", "Verdict",
+    "lower_pipeline", "lower_pipelines",
     "CompilerOptions", "CompiledApp", "CompileState", "PassManager",
     "PassRecord", "cached_jit", "CachedFunction", "compile",
     "trace", "TracedFunction", "TracedApp", "atomic", "attention_flops",

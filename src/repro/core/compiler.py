@@ -73,6 +73,11 @@ class CompilerOptions:
     disable              pass names to skip (each falls back to its identity
                          form; e.g. disabling `epilogue_fuse` yields one
                          stage per op)
+    lowering_policy      profitability gate on kernel matches (core/lower.py):
+                         "always" force-lowers every match, "cost" decides by
+                         roofline estimate alone, "auto" (default) settles
+                         estimate-uncertain sites with a one-shot compile-time
+                         microbenchmark (verdicts cached process-wide)
     dump_ir              hook called as dump_ir(pass_name, state) after every
                          pass -- the introspection point for IR dumps
     """
@@ -84,11 +89,15 @@ class CompilerOptions:
     balance: bool = True
     hw: HwSpec | None = None
     disable: tuple[str, ...] = ()
+    lowering_policy: str = "auto"
     dump_ir: Callable[[str, "CompileState"], None] | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.lowering_policy not in ("always", "cost", "auto"):
+            raise ValueError(f"lowering_policy must be always|cost|auto, "
+                             f"got {self.lowering_policy!r}")
         for p in self.disable:
             if p not in PASS_NAMES:
                 raise ValueError(f"unknown pass {p!r} in disable "
@@ -114,7 +123,8 @@ class CompilerOptions:
         """Hashable identity for the executable cache (hooks excluded: they
         observe compilation but cannot change the produced programs)."""
         return (self.mode, self.tile_bytes, self.split_reduction_min,
-                self.patterns, self.min_sf_size, tuple(sorted(self.disabled)))
+                self.patterns, self.min_sf_size, tuple(sorted(self.disabled)),
+                self.lowering_policy)
 
 
 @dataclass
@@ -245,7 +255,9 @@ def _pass_lower_kernels(state: CompileState, opts: CompilerOptions) -> str:
         # wasted work and describe() would claim kernels that never run
         state.lowering = None
         return f"skipped: kernels only execute in kitsune mode ({opts.mode})"
-    state.lowering = lower_pipelines(pg.graph, _pipelined_members(pg))
+    state.lowering = lower_pipelines(pg.graph, _pipelined_members(pg),
+                                     hw=opts.resolved_hw(),
+                                     policy=opts.lowering_policy)
     return state.lowering.summary()
 
 
@@ -440,6 +452,9 @@ class CompiledApp:
             if low is not None:
                 for m in low.matches:
                     tag = "" if m.executable else " (plan-only)"
+                    if m.verdict is not None:
+                        word = "accepted" if m.verdict.lowered else "declined"
+                        tag += f" [{word}: {m.verdict.reason()}]"
                     lines.append(f"    lowered {m.label()}{tag}: "
                                  f"{'+'.join(m.ops)} -> {m.out}")
                 for op, why in low.fallbacks.items():
@@ -459,6 +474,14 @@ class CompiledApp:
                     lines.append(f"      feed {name}: "
                                  f"{e['nbytes'] / 1e6:.3f}MB {ok}")
         return "\n".join(lines)
+
+    def lowering_verdicts(self) -> list[dict]:
+        """Per-site kernel-lowering verdict rows (kernel, ops, decision,
+        source, estimate/measurement microseconds) -- the bench harness
+        serializes these into BENCH_smoke.json's `lowering_verdicts`."""
+        if self.lowering is None:
+            return []
+        return self.lowering.verdict_table()
 
     def donation_report(self) -> dict:
         """Which feeds XLA actually aliased in place, and bytes saved, per

@@ -6,6 +6,8 @@ models consume ops.py so one KernelConfig flag flips the implementation.
 from .ops import (KernelConfig, attention, decode_attention, mlp, mlp_bwd,
                   mlp_swiglu, mlp_swiglu_bwd, reduce)
 from .flash_attention import combine_partials
+from .autotune import autotune, time_fn, tune_cache
 
 __all__ = ["KernelConfig", "attention", "decode_attention", "mlp", "mlp_bwd",
-           "mlp_swiglu", "mlp_swiglu_bwd", "reduce", "combine_partials"]
+           "mlp_swiglu", "mlp_swiglu_bwd", "reduce", "combine_partials",
+           "autotune", "time_fn", "tune_cache"]

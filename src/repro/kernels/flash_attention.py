@@ -25,6 +25,28 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def tile_candidates(sq: int, skv: int) -> list[dict]:
+    """Autotune grid for flash_attention: (block_q, block_k) pairs dividing
+    (sq, skv) exactly; the historical 128/128 default is always present."""
+    bqs = [bq for bq in (64, 128, 256) if sq % bq == 0] or [min(128, sq)]
+    bks = [bk for bk in (64, 128, 256) if skv % bk == 0] or [min(128, skv)]
+    cands = [{"block_q": bq, "block_k": bk} for bq in bqs for bk in bks]
+    default = {"block_q": min(128, sq), "block_k": min(128, skv)}
+    if default not in cands:
+        cands.append(default)
+    return cands
+
+
+def decode_tile_candidates(s_len: int) -> list[dict]:
+    """Autotune grid for flash_decode's split-K chunk size."""
+    bss = [bs for bs in (128, 256, 512) if s_len % bs == 0]
+    default = {"block_s": min(256, s_len)}
+    cands = [{"block_s": bs} for bs in bss]
+    if default not in cands:
+        cands.append(default)
+    return cands
+
+
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                  scale: float, causal: bool, window: int | None,
                  block_q: int, block_k: int, n_k: int):

@@ -40,6 +40,21 @@ _ACTS = {
 }
 
 
+def tile_candidates(m: int, hdim: int) -> list[dict]:
+    """Autotune grid for the fused-MLP kernels (fwd and bwd share tiles --
+    ops._blocks is the single tiling rule): (block_m, block_h) pairs that
+    exactly divide (m, hdim), deduped, historical default included.  The
+    autotuner (kernels/autotune.py) times each at first-build."""
+    bms = [bm for bm in (32, 64, 128, 256) if m % bm == 0] or [1]
+    bhs = [bh for bh in (128, 256, 512, 1024) if hdim % bh == 0] or [hdim]
+    cands = [{"block_m": bm, "block_h": bh} for bm in bms for bh in bhs]
+    default = {"block_m": min(128, m) if m % min(128, m) == 0 else 1,
+               "block_h": 512 if hdim % 512 == 0 else hdim}
+    if default not in cands:
+        cands.append(default)
+    return cands
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------

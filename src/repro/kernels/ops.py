@@ -30,6 +30,9 @@ class KernelConfig:
     block_h: int = 512
     block_q: int = 128
     block_k: int = 128
+    block_s: int = 256          # flash_decode split-K chunk
+    block_r: int = 128          # queue_reduce row tile
+    autotune: bool = False      # search tile_candidates grids at lower time
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int):
@@ -177,7 +180,7 @@ def decode_attention(q, k, v, *, valid_len=None,
                      cfg: KernelConfig = KernelConfig()):
     if cfg.use_pallas:
         return flash_decode(q, k, v, valid_len=valid_len,
-                            interpret=cfg.interpret)
+                            block_s=cfg.block_s, interpret=cfg.interpret)
     return ref.decode_ref(q, k, v, valid_len=valid_len)
 
 
@@ -188,5 +191,6 @@ def decode_attention(q, k, v, *, valid_len=None,
 def reduce(x, *, op: str = "sum", cfg: KernelConfig = KernelConfig()):
     """Reduce axis 0 of (N, R, C)."""
     if cfg.use_pallas:
-        return queue_reduce(x, op=op, interpret=cfg.interpret)
+        return queue_reduce(x, op=op, block_rows=cfg.block_r,
+                            interpret=cfg.interpret)
     return ref.reduce_ref(x, op)

@@ -26,6 +26,19 @@ _COMBINE = {
 _INIT = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
 
 
+def tile_candidates(rows: int) -> list[dict]:
+    """Autotune grid for queue_reduce's row tile: divisors of `rows`, with
+    the historical fallback rule (128, else 1) always present."""
+    brs = [br for br in (8, 32, 128) if rows % br == 0]
+    default_br = min(128, rows)
+    if rows % default_br:
+        default_br = 1
+    cands = [{"block_r": br} for br in brs]
+    if {"block_r": default_br} not in cands:
+        cands.append({"block_r": default_br})
+    return cands
+
+
 def _reduce_kernel(x_ref, o_ref, acc_ref, *, op: str, n: int):
     i = pl.program_id(1)  # reduction step: innermost, so accumulation over
     # the queue is consecutive for each output block
