@@ -17,8 +17,12 @@ requests.  Compile time is excluded: each engine runs the workload once to
 warm the process-wide executable cache, then a FRESH engine instance is
 timed (steady-state serving, not cold start).
 
+The ``chaos`` section replays the workload under a scripted multi-site
+fault schedule (docs/SERVING.md "Failure model") and asserts the
+fault-tolerance contract while measuring recovery time.
+
 Smoke mode (``benchmarks/run.py --smoke``) records the result under the
-``serve`` key of BENCH_smoke.json (schema 3).
+``serve`` key of BENCH_smoke.json (schema 5).
 """
 from __future__ import annotations
 
@@ -28,7 +32,8 @@ import jax
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serve import PagedServingEngine, ServeConfig, ServingEngine
+from repro.serve import (FaultSpec, PagedServingEngine, ServeConfig,
+                         ServingEngine)
 
 
 def _prompts(n: int) -> dict[int, list[int]]:
@@ -85,6 +90,89 @@ class _PagedAdapter(PagedServingEngine):
         self.submit(prompt, rid=rid)
 
 
+def chaos(cfg, params, *, n_requests: int = 8, max_len: int = 24,
+          batch: int = 4, csv: bool = True) -> dict:
+    """Chaos section: the SAME workload under a scripted multi-site fault
+    schedule -- one pool-exhaustion event, one tick exception blamed on a
+    named request, one poisoned-logits request caught by the NaN guard.
+
+    Tracked claims (the fault-tolerance layer's contract, see
+    docs/SERVING.md "Failure model"):
+      * the engine stays live (never degraded) and drains the workload;
+      * exactly the two culpable requests fail, with structured errors;
+      * every SURVIVOR's tokens are bitwise identical to the fault-free
+        run of the identical engine (which PR 5 pinned bitwise-equal to
+        serving each request alone);
+      * recovery_ticks: ticks from each fault firing back to token
+        progress -- the stall a streaming client would see.
+    """
+    prompts = _prompts(n_requests)
+    plan = (FaultSpec("pool.alloc", hits=(6,)),
+            FaultSpec("tick.step", ticks=(6,), rid=2),
+            FaultSpec("tick.logits", ticks=(10,), rid=3))
+
+    def make(fault):
+        return PagedServingEngine(
+            cfg, params,
+            ServeConfig(max_len=max_len, batch=batch, prefill_chunk=4,
+                        num_blocks=16, nan_guard=True,
+                        fault_plan=plan if fault else ()),
+            eos_id=-1)
+
+    clean = make(fault=False)
+    for rid, p in prompts.items():
+        clean.submit(p, rid=rid)
+    baseline = clean.run_until_done()
+
+    eng = make(fault=True)
+    for rid, p in prompts.items():
+        eng.submit(p, rid=rid)
+    laps, toks_per_tick = [], []
+    t0 = time.perf_counter()
+    for _ in range(10_000):
+        t1 = time.perf_counter()
+        left = eng.tick()
+        laps.append(time.perf_counter() - t1)
+        toks_per_tick.append(eng.tokens_out)
+        if left == 0:
+            break
+    else:
+        raise RuntimeError("chaos bench did not drain")
+    wall = time.perf_counter() - t0
+
+    health = eng.health()
+    assert health["state"] == "healthy", f"engine degraded: {health}"
+    assert sorted(eng.failed) == [2, 3], f"wrong blame: {eng.failed}"
+    for rid, out in eng.done.items():
+        assert out == baseline[rid], f"survivor {rid} diverged under faults"
+    eng.stats()                             # asserts pool conservation
+
+    # recovery time: ticks from each fault event to the next token progress
+    recoveries = []
+    for ev in eng.injector.history:
+        t = ev["tick"]
+        rec = next((i - t for i in range(t + 1, len(toks_per_tick))
+                    if toks_per_tick[i] > toks_per_tick[t]), None)
+        if rec is not None:
+            recoveries.append(rec)
+    tokens = sum(len(v) for v in eng.done.values())
+    out = {"tokens": tokens, "wall_s": wall, "ticks": len(laps),
+           "tok_s": tokens / wall,
+           "tick_p99_ms": _pct(laps, 0.99) * 1e3,
+           "faults_fired": len(eng.injector.history),
+           "failed": sorted(eng.failed),
+           "survivors_bitwise": True,
+           "recovery_ticks_mean": (sum(recoveries) / len(recoveries)
+                                   if recoveries else 0.0),
+           "recovery_ticks_max": max(recoveries, default=0)}
+    if csv:
+        print(f"serve_chaos,{wall / max(tokens, 1) * 1e6:.1f},"
+              f"tok_s={out['tok_s']:.1f} p99={out['tick_p99_ms']:.2f}ms "
+              f"faults={out['faults_fired']} failed={out['failed']} "
+              f"recovery_mean={out['recovery_ticks_mean']:.1f}ticks")
+    return out
+
+
 def main(csv: bool = True, n_requests: int = 8, max_len: int = 24,
          batch: int = 2) -> dict:
     cfg = get_config("gemma3-1b").reduced()
@@ -121,7 +209,9 @@ def main(csv: bool = True, n_requests: int = 8, max_len: int = 24,
 
     out = {"legacy": legacy, "paged": paged,
            "speedup": paged["tok_s"] / legacy["tok_s"],
-           "more_concurrency": paged["peak_active"] > legacy["slots"]}
+           "more_concurrency": paged["peak_active"] > legacy["slots"],
+           "chaos": chaos(cfg, params, n_requests=n_requests,
+                          max_len=max_len, batch=2 * batch, csv=csv)}
     if csv:
         for name, r in (("legacy", legacy), ("paged", paged)):
             us = r["wall_s"] / max(r["tokens"], 1) * 1e6

@@ -109,12 +109,15 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     apps_train = bench_e2e.measured_train_e2e(csv=False, iters=5)
     # serving axis: paged KV engine vs the legacy contiguous engine, same
     # request stream; tracks tokens/s, tick p50/p99, and the concurrency
-    # headroom paging buys (peak_active vs legacy slot count)
+    # headroom paging buys (peak_active vs legacy slot count).  The chaos
+    # sub-section replays the workload under a scripted multi-site fault
+    # schedule and asserts the fault-tolerance contract (only culpable
+    # requests fail, survivors bitwise) while recording recovery ticks.
     serve = bench_serve.main(csv=False)
     check = check_lowering_regressions(apps_measured)
     calibration = bench_e2e.calibration_from_measured(apps_measured)
     results = {
-        "schema": 4,
+        "schema": 5,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -143,7 +146,9 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
           f"zoo={list(zoo_e2e)}, train_traffic_red={train_red}, "
           f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x, "
           f"serve_paged={serve['paged']['tok_s']:.0f}tok/s "
-          f"{serve['speedup']:.2f}x legacy)")
+          f"{serve['speedup']:.2f}x legacy, "
+          f"chaos_recovery={serve['chaos']['recovery_ticks_mean']:.1f}ticks "
+          f"failed={serve['chaos']['failed']})")
     print(f"# verdict table -> {verdict_path} "
           f"(calibrated eff={calibration['eff']:.2e}, "
           f"launch_s={calibration['launch_s']:.2e})")

@@ -54,25 +54,47 @@ class Checkpointer:
         treedef = jax.tree_util.tree_structure(tree)
 
         def write():
+            # Crash-safety: EVERYTHING -- leaves, manifest, and the
+            # COMMITTED marker itself -- is staged into a temp dir, each
+            # file written to a .part name and os.replace'd into place, and
+            # the whole directory is published by ONE atomic rename.  A
+            # crash at any point leaves either the previous committed step
+            # intact or a *.tmp orphan that restore ignores; there is no
+            # window where a half-written file sits under a COMMITTED
+            # marker.
             path = os.path.join(self.dir, f"step_{step:08d}")
             tmp = path + ".tmp"
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
+
+            def atomic_write(name, writer):
+                part = os.path.join(tmp, name + ".part")
+                with open(part, "wb") as f:
+                    writer(f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(part, os.path.join(tmp, name))
+
             manifest = {"step": step, "extra": extra or {},
                         "leaves": {}, "treedef": None}
             for k, v in staged.items():
                 fn = k.replace("/", "__") + ".npy"
-                np.save(os.path.join(tmp, fn), v)
+                atomic_write(fn, lambda f, v=v: np.save(f, v))
                 manifest["leaves"][k] = {
                     "file": fn, "shape": list(v.shape), "dtype": str(v.dtype)}
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
+            atomic_write("manifest.json",
+                         lambda f: f.write(json.dumps(manifest).encode()))
+            atomic_write("COMMITTED", lambda f: f.write(b"ok"))
             if os.path.exists(path):
+                # same-step overwrite: retire the old committed dir first
+                # (drop its marker before the rmtree so a crash mid-rmtree
+                # never leaves a torn-but-committed directory)
+                marker = os.path.join(path, "COMMITTED")
+                if os.path.exists(marker):
+                    os.remove(marker)
                 shutil.rmtree(path)
             os.replace(tmp, path)
-            with open(os.path.join(path, "COMMITTED"), "w") as f:
-                f.write("ok")
             self._gc()
 
         if self.async_save:

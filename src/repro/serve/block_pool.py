@@ -42,12 +42,16 @@ class BlockPool:
     """
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 on_evict: Callable[[Hashable, int], None] | None = None):
+                 on_evict: Callable[[Hashable, int], None] | None = None,
+                 fault=None):
         if num_blocks < 1:
             raise ValueError(f"need at least one usable block, got {num_blocks}")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._on_evict = on_evict
+        # optional serve.faults.FaultInjector: the "pool.alloc" site lets
+        # tests/chaos benches script exhaustion without filling the pool
+        self.fault = fault
         self._free: deque[int] = deque(range(1, num_blocks + 1))
         self._ref: dict[int, int] = {}            # bid -> refcount (active only)
         self._evictable: OrderedDict[int, None] = OrderedDict()  # LRU order
@@ -76,6 +80,8 @@ class BlockPool:
     # -- allocation --------------------------------------------------------
     def alloc(self) -> int:
         """Return a fresh block (ref=1), evicting a cached block if needed."""
+        if self.fault is not None and self.fault.check("pool.alloc"):
+            raise OutOfBlocks("injected fault at pool.alloc")
         if self._free:
             bid = self._free.popleft()
         elif self._evictable:

@@ -48,6 +48,7 @@ from repro.kernels import KernelConfig
 from repro.models import get_model
 
 from .block_pool import BlockPool, OutOfBlocks
+from .faults import DeadlineExceeded, EngineError, FaultInjector, QueueFull
 from .prefix_cache import PrefixCache
 from .scheduler import Request, Scheduler, blocks_for
 
@@ -90,6 +91,26 @@ class ServeConfig:
     # only value-level (not bitwise) batch invariance.
     view_buckets: bool = False
     max_new_tokens: int | None = None    # default per-request cap
+    # -- fault tolerance (docs/SERVING.md "Failure model") -----------------
+    # Scripted fault schedule (tuple of faults.FaultSpec) + RNG seed: tests
+    # and the chaos bench install deterministic failures at named sites.
+    fault_plan: tuple = ()
+    fault_seed: int = 0
+    # Opt-in guard: after each tick, decode logits of sampling slots are
+    # checked for NaN/Inf; a poisoned slot fails with EngineError(site=
+    # "tick.logits") and releases its blocks instead of streaming garbage.
+    nan_guard: bool = False
+    # Consecutive failed ticks before the engine gives up isolating blame
+    # and transitions to the terminal "degraded" state (health()).
+    max_tick_retries: int = 3
+    # Consecutive transient prefill-chunk failures tolerated per request
+    # before its handle is failed.
+    max_chunk_retries: int = 3
+    # Waiting-queue bound: submit() raises QueueFull past it (async submit
+    # can block-with-timeout instead).  None = unbounded.
+    max_queue: int | None = None
+    # Default per-request deadline in seconds (submit(deadline_s=) wins).
+    default_deadline_s: float | None = None
 
 
 def _apply_cache_capacity(sc: ServeConfig) -> None:
@@ -257,13 +278,23 @@ class RequestHandle:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def error(self) -> BaseException | None:
+        return self._error
+
     def tokens(self) -> list[int]:
         with self._lock:
             return list(self._tokens)
 
     def result(self, timeout: float | None = None) -> list[int]:
         if not self._event.wait(timeout):
-            raise TimeoutError(f"request {self.rid} still running")
+            # a handle failed while we were waiting still reports ITS error
+            # (the stored EngineError beats the caller's timeout), and the
+            # timeout itself says who stalled and how far it got
+            if self._error is not None:
+                raise self._error
+            raise TimeoutError(
+                f"request {self.rid} still running after {timeout}s "
+                f"({len(self.tokens())} tokens so far)")
         if self._error is not None:
             raise self._error
         return self.tokens()
@@ -371,12 +402,15 @@ class PagedKVExecutor:
     DEFAULT_BUDGET = 256 * 1024 * 1024   # no device stats (CPU): 256 MiB
 
     def __init__(self, cfg: ArchConfig, params, sc: ServeConfig, *,
-                 kernels: KernelConfig = KernelConfig(), sharder=NULL):
+                 kernels: KernelConfig = KernelConfig(), sharder=NULL,
+                 fault: FaultInjector | None = None):
         self.cfg = cfg
         self.params = params
         self.sc = sc
         self.kernels = kernels
         self.sharder = sharder
+        self.fault = fault
+        self.profile_error: str | None = None
         template = get_model(cfg).init_cache(1, sc.block_size)
         if "k" not in template:
             raise ValueError(f"{cfg.name}: no KV cache to page")
@@ -402,7 +436,12 @@ class PagedKVExecutor:
 
     def profile_run(self) -> int:
         """Working-set bytes of one compiled decode tick (C=1, 1-block view,
-        probe-sized pool) -- the activation term of the capacity model."""
+        probe-sized pool) -- the activation term of the capacity model.
+        Raises MemoryError at the `executor.profile` fault site; real
+        lowering failures degrade to 0 (capacity model loses only the
+        activation term)."""
+        if self.fault is not None and self.fault.check("executor.profile"):
+            raise MemoryError("injected OOM at executor.profile")
         sc = self.sc
         probe = functools.partial(paged_tick, cfg=self.cfg,
                                   kernels=self.kernels, sharder=self.sharder,
@@ -448,9 +487,16 @@ class PagedKVExecutor:
         param_bytes = sum(int(np.prod(jnp.shape(x)))
                           * jnp.asarray(x).dtype.itemsize
                           for x in jax.tree_util.tree_leaves(self.params))
-        act_bytes = self.profile_run()
-        n = (budget - param_bytes - act_bytes) // self.block_bytes
         floor = self.max_blocks + self.sc.batch
+        try:
+            act_bytes = self.profile_run()
+        except MemoryError as exc:
+            # profiling OOMed: fall back to the guaranteed-viable floor
+            # capacity instead of killing engine construction -- the engine
+            # runs degraded-capacity but correct, and reports why
+            self.profile_error = str(exc)
+            return floor, 0
+        n = (budget - param_bytes - act_bytes) // self.block_bytes
         return max(int(n), floor), 0
 
     def initialize_cache(self, num_blocks: int) -> tuple[jax.Array, jax.Array]:
@@ -473,7 +519,7 @@ class PagedServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, sc: ServeConfig, *,
                  kernels: KernelConfig = KernelConfig(), sharder=NULL,
-                 eos_id: int = 1):
+                 eos_id: int = 1, clock=time.monotonic):
         self.cfg = cfg
         self.params = params
         self.sc = sc
@@ -481,9 +527,12 @@ class PagedServingEngine:
         self.kernels = kernels
         self.sharder = sharder
         self.eos = eos_id
+        self.clock = clock               # injectable for deadline tests
         if cfg.family == "encdec":
             raise ValueError("paged serving covers decoder-only families")
         _apply_cache_capacity(sc)
+        self.injector = (FaultInjector(tuple(sc.fault_plan), sc.fault_seed)
+                         if sc.fault_plan else None)
 
         b = sc.batch
         full = self.model.init_cache(b, 1)
@@ -493,7 +542,8 @@ class PagedServingEngine:
         self.max_blocks = blocks_for(sc.max_len, sc.block_size)
         if self.has_kv:
             self.executor = PagedKVExecutor(cfg, params, sc, kernels=kernels,
-                                            sharder=sharder)
+                                            sharder=sharder,
+                                            fault=self.injector)
             if sc.num_blocks is not None:
                 num = sc.num_blocks
             else:
@@ -501,7 +551,8 @@ class PagedServingEngine:
             self.kp, self.vp = self.executor.initialize_cache(num)
             self.pool = BlockPool(
                 num, sc.block_size,
-                on_evict=lambda key, bid: self.prefix.on_evict(key, bid))
+                on_evict=lambda key, bid: self.prefix.on_evict(key, bid),
+                fault=self.injector)
             self.prefix = PrefixCache(self.pool)
             self.tables = np.zeros((b, self.max_blocks), np.int32)
         else:
@@ -517,10 +568,11 @@ class PagedServingEngine:
         self.scheduler = Scheduler(block_size=sc.block_size,
                                    prefill_chunk=sc.prefill_chunk,
                                    token_budget=sc.token_budget,
-                                   n_slots=b)
+                                   n_slots=b, max_queue=sc.max_queue)
         self.slots: list[dict | None] = [None] * b
         self.pos = np.zeros(b, np.int64)
         self.done: dict[int, list[int]] = {}
+        self.failed: dict[int, EngineError] = {}
         self.handles: dict[int, RequestHandle] = {}
         self._rid = 0
         self._steps: dict[tuple[int, int], Any] = {}
@@ -528,6 +580,15 @@ class PagedServingEngine:
         self.ticks = 0
         self.tokens_out = 0
         self.peak_active = 0
+        # -- health/degraded-mode state (health()) -------------------------
+        self.state = "healthy"           # healthy | degraded | stopped
+        self.last_error: EngineError | None = None
+        self.consecutive_failures = 0
+        self.ticks_since_progress = 0
+        self._culprit_rid: int | None = None   # tick-scoped blame context
+        self._tick_admitted: list[int] = []
+        self._tick_no = 0
+        self._progressed = False
 
     # -- geometry ----------------------------------------------------------
     def _make_view_buckets(self) -> list[int]:
@@ -592,27 +653,58 @@ class PagedServingEngine:
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt: list[int], rid: int | None = None,
-               max_new_tokens: int | None = None) -> RequestHandle:
+               max_new_tokens: int | None = None,
+               deadline_s: float | None = None) -> RequestHandle:
+        """Enqueue a request.  Raises QueueFull when the bounded admission
+        queue (`ServeConfig.max_queue`) is at capacity -- explicit
+        backpressure the caller must absorb (AsyncServingEngine.submit can
+        block-with-timeout instead).  `deadline_s` (or the config default)
+        fails the request with DeadlineExceeded once that many seconds pass
+        -- queued requests before any prefill budget is spent, in-flight
+        requests by slot eviction at the next tick."""
+        if self.state != "healthy":
+            if rid is None:
+                self._rid += 1
+                rid = self._rid
+            handle = RequestHandle(rid, list(prompt))
+            self.handles[rid] = handle
+            handle._fail(EngineError(
+                f"engine is {self.state}: request {rid} rejected",
+                site="engine." + self.state, tick=self.ticks, rid=rid))
+            return handle
+        if deadline_s is None:
+            deadline_s = self.sc.default_deadline_s
         if rid is None:
             self._rid += 1
             rid = self._rid
         handle = RequestHandle(rid, list(prompt))
-        self.handles[rid] = handle
         req = Request(rid=rid, prompt=list(prompt), handle=handle,
-                      max_new=max_new_tokens or self.sc.max_new_tokens)
+                      max_new=max_new_tokens or self.sc.max_new_tokens,
+                      deadline=(None if deadline_s is None
+                                else self.clock() + deadline_s))
         if len(prompt) >= self.sc.max_len:
+            self.handles[rid] = handle
             self.scheduler.rejected += 1
             handle._fail(ValueError(
                 f"prompt of {len(prompt)} tokens >= max_len {self.sc.max_len}"))
             return handle
         if self.pool is not None and \
                 self.scheduler.admission_cost(req) > self.pool.num_blocks:
+            self.handles[rid] = handle
             self.scheduler.rejected += 1
             handle._fail(ValueError(
                 f"request needs {self.scheduler.admission_cost(req)} blocks; "
                 f"pool holds {self.pool.num_blocks}"))
             return handle
-        self.scheduler.submit(req)
+        if not self.scheduler.submit(req):
+            # bounded queue full: backpressure is an EXCEPTION, not a failed
+            # handle -- the caller must know to retry/shed, and no handle
+            # leaks into self.handles
+            raise QueueFull(
+                f"admission queue full ({self.sc.max_queue} waiting); "
+                f"request {rid} not enqueued",
+                site="engine.queue", tick=self.ticks, rid=rid)
+        self.handles[rid] = handle
         return handle
 
     def _admit(self) -> None:
@@ -635,8 +727,10 @@ class PagedServingEngine:
                 "fed": reused, "nblocks": len(reused_bids), "last": None,
                 "handle": req.handle, "max_new": req.max_new,
                 "admit_seq": self.scheduler.admit_seq,
+                "chunk_fails": 0,
             }
             self.pos[i] = reused
+            self._tick_admitted.append(req.rid)
             resets.append(i)
         if resets and self.aux_init:
             # reinitialize recurrent state for refilled slots only
@@ -690,6 +784,9 @@ class PagedServingEngine:
             slot = self.slots[i]
             if slot is None or n_tok[i] == 0:
                 continue
+            # blame context: if allocation fails terminally, the request
+            # whose growth triggered it is the culprit
+            self._culprit_rid = slot["rid"]
             need = blocks_for(int(self.pos[i]) + n_tok[i], self.sc.block_size)
             while slot["nblocks"] < need:
                 try:
@@ -705,12 +802,192 @@ class PagedServingEngine:
                     continue
                 self.tables[i, slot["nblocks"]] = bid
                 slot["nblocks"] += 1
+        self._culprit_rid = None
+
+    # -- fault isolation ---------------------------------------------------
+    def _slot_of(self, rid: int) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is not None and s["rid"] == rid:
+                return i
+        return None
+
+    def _fail_request(self, rid: int, err: EngineError) -> None:
+        """Terminal failure of ONE request: release its slot/blocks (or pull
+        it from the waiting queue) and fail its handle -- co-tenants keep
+        their state untouched, so survivors stay bitwise identical."""
+        self.failed[rid] = err
+        i = self._slot_of(rid)
+        if i is not None:
+            self.slots[i]["handle"]._fail(err)
+            self._release(i, cache_prefix=False)
+            return
+        for req in list(self.scheduler.waiting):
+            if req.rid == rid:
+                self.scheduler.waiting.remove(req)
+                req.handle._fail(err)
+                return
+        h = self.handles.get(rid)
+        if h is not None and not h.done():
+            h._fail(err)
+
+    def _pick_culprit(self) -> int | None:
+        """Blame for a whole-tick failure: the explicit culprit context if
+        set (e.g. the slot whose growth exhausted the pool), else the
+        request admitted THIS tick (its shape/chunk is what changed), else
+        the newest admission among live slots."""
+        if self._culprit_rid is not None:
+            return self._culprit_rid
+        for rid in reversed(self._tick_admitted):
+            if self._slot_of(rid) is not None:
+                return rid
+        newest = None
+        for s in self.slots:
+            if s is not None and (newest is None
+                                  or s["admit_seq"] > newest["admit_seq"]):
+                newest = s
+        return newest["rid"] if newest is not None else None
+
+    def _enter_degraded(self, err: EngineError) -> None:
+        """Terminal engine state: stop isolating, fail everything in flight
+        and queued so every handle reaches a terminal state (drain()/
+        result() raise instead of hanging), report via health()."""
+        self.state = "degraded"
+        self.last_error = err
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                tomb = EngineError(
+                    f"engine degraded at tick {self._tick_no}: {err}",
+                    site="engine.degraded", tick=self._tick_no, rid=s["rid"])
+                self.failed[s["rid"]] = tomb
+                s["handle"]._fail(tomb)
+                self._release(i, cache_prefix=False)
+        while self.scheduler.waiting:
+            req = self.scheduler.waiting.popleft()
+            tomb = EngineError(
+                f"engine degraded at tick {self._tick_no}: {err}",
+                site="engine.degraded", tick=self._tick_no, rid=req.rid)
+            self.failed[req.rid] = tomb
+            if req.handle is not None:
+                req.handle._fail(tomb)
+
+    def _expire_deadlines(self) -> None:
+        now = self.clock()
+        for req in self.scheduler.expire(now):
+            err = DeadlineExceeded(
+                f"request {req.rid} expired in queue "
+                f"(deadline passed before admission)",
+                site="engine.deadline", tick=self._tick_no, rid=req.rid)
+            self.failed[req.rid] = err
+            if req.handle is not None:
+                req.handle._fail(err)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            dl = s["req"].deadline
+            if dl is not None and now > dl:
+                self.scheduler.expired += 1
+                self._fail_request(s["rid"], DeadlineExceeded(
+                    f"request {s['rid']} expired in flight after "
+                    f"{len(s['out'])} tokens", site="engine.deadline",
+                    tick=self._tick_no, rid=s["rid"]))
+
+    def health(self) -> dict:
+        """Liveness snapshot: `state` is "healthy" until max_tick_retries
+        CONSECUTIVE tick failures force the terminal "degraded" state
+        ("stopped" once the owner closes the engine); plus the last
+        structured error, the consecutive-failure count, and how many ticks
+        have passed without any request making progress."""
+        return {"state": self.state,
+                "last_error": self.last_error,
+                "consecutive_failures": self.consecutive_failures,
+                "ticks_since_progress": self.ticks_since_progress,
+                "ticks": self.ticks,
+                "failed": len(self.failed)}
 
     # -- the tick ----------------------------------------------------------
     def tick(self) -> int:
-        """One engine tick; returns #requests still in flight afterwards."""
+        """One engine tick; returns #requests still in flight afterwards.
+
+        Fault isolation: any exception inside the tick is caught, blamed on
+        the culpable request (tick-scoped culprit context), and ONLY that
+        handle fails with a structured EngineError -- the next tick runs
+        without it.  After `ServeConfig.max_tick_retries` consecutive
+        failing ticks the engine stops guessing and enters the terminal
+        degraded state (health()) with every remaining handle failed."""
+        if self.state != "healthy":
+            return 0
+        t = self.ticks                   # this attempt's tick number
+        self.ticks = t + 1               # failed ticks advance the clock too
+        self._tick_no = t
+        self._tick_admitted = []
+        self._culprit_rid = None
+        self._progressed = False
+        if self.injector is not None:
+            self.injector.advance(t)
+        self._expire_deadlines()
+        try:
+            left = self._tick_inner()
+        except Exception as exc:  # noqa: BLE001 -- isolate, blame, keep serving
+            self.consecutive_failures += 1
+            self.ticks_since_progress += 1
+            rid = self._pick_culprit()
+            if isinstance(exc, EngineError):
+                err = exc
+            else:
+                err = EngineError(
+                    f"tick {t} failed at {type(exc).__name__}: {exc}",
+                    site="tick.step", tick=t, rid=rid)
+                err.__cause__ = exc
+            err.tick, err.rid = t, rid
+            self.last_error = err
+            if rid is not None:
+                self._fail_request(rid, err)
+            if self.consecutive_failures >= self.sc.max_tick_retries or \
+                    rid is None:
+                self._enter_degraded(err)
+            return self.pending()
+        if self._progressed:
+            self.consecutive_failures = 0
+            self.ticks_since_progress = 0
+        else:
+            self.ticks_since_progress += 1
+        return left
+
+    def _prefill_faults(self, n_tok: list[int]) -> None:
+        """`prefill.chunk` fault site: a firing spec makes one prefilling
+        slot's chunk fail TRANSIENTLY -- the chunk is skipped this tick and
+        retried on the next; after `max_chunk_retries` consecutive failures
+        the request is failed for good."""
+        if self.injector is None:
+            return
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s is not None and n_tok[i] > 0
+                      and s["fed"] < len(s["seq"])]
+        if not prefilling:
+            return
+        spec = self.injector.check("prefill.chunk")
+        if spec is None:
+            for i in prefilling:
+                self.slots[i]["chunk_fails"] = 0
+            return
+        victims = [i for i in prefilling
+                   if spec.rid is None or self.slots[i]["rid"] == spec.rid]
+        if not victims:
+            return
+        i = victims[-1]                     # newest-admitted qualifying slot
+        slot = self.slots[i]
+        n_tok[i] = 0
+        slot["chunk_fails"] += 1
+        if slot["chunk_fails"] > self.sc.max_chunk_retries:
+            self._fail_request(slot["rid"], EngineError(
+                f"request {slot['rid']}: prefill chunk failed "
+                f"{slot['chunk_fails']} consecutive times",
+                site="prefill.chunk", tick=self._tick_no, rid=slot["rid"]))
+
+    def _tick_inner(self) -> int:
         self._admit()
         n_tok = self.scheduler.plan(self.slots)
+        self._prefill_faults(n_tok)
         self._ensure_blocks(n_tok)
         active = [i for i, t in enumerate(n_tok) if t > 0]
         if not active:
@@ -718,6 +995,17 @@ class PagedServingEngine:
                 + len(self.scheduler.waiting)
         self.peak_active = max(self.peak_active,
                                sum(s is not None for s in self.slots))
+        if self.injector is not None:
+            spec = self.injector.check("tick.step")
+            if spec is not None:
+                # fires BEFORE the compiled call so no tick state (and no
+                # donated pool buffer) has been touched -- the retry without
+                # the blamed request starts from a clean slate
+                if spec.rid is not None:
+                    self._culprit_rid = spec.rid
+                raise EngineError(
+                    f"injected fault at tick.step (tick {self._tick_no})",
+                    site="tick.step", tick=self._tick_no, rid=spec.rid)
 
         c = 1 if max(n_tok) <= 1 else self.scheduler.chunk
         tokens = np.zeros((self.sc.batch, c), np.int32)
@@ -755,15 +1043,52 @@ class PagedServingEngine:
             self.kp, self.vp = out["kp"], out["vp"]
         for name in self.aux:
             self.aux[name] = out[name]
-        nxt = np.asarray(out["tokens_next"])
+        nxt = np.asarray(out["tokens_next"]).copy()
         self.pos = np.asarray(out["pos"], np.int64).copy()
-        self.ticks += 1
+        self._progressed = True
+
+        # slots that finish prefill this tick sample their first/next token
+        sampling = [i for i in active
+                    if self.slots[i]["fed"] + n_tok[i]
+                    >= len(self.slots[i]["seq"])]
+        logits_np = None
+        if self.injector is not None and sampling:
+            spec = self.injector.check("tick.logits")
+            if spec is not None:
+                # `tick.logits` fault site: corrupt ONE sampling slot's
+                # logits at the host boundary (the compiled program is never
+                # perturbed, so co-tenant state stays bitwise clean) and
+                # derail its sampled token the way a real NaN argmax would
+                victims = [i for i in sampling
+                           if spec.rid is None
+                           or self.slots[i]["rid"] == spec.rid]
+                if victims:
+                    vi = victims[-1]
+                    logits_np = np.asarray(out["logits"]).copy()
+                    logits_np[vi, :] = (np.nan if spec.mode == "nan"
+                                        else np.inf)
+                    nxt[vi] = 0
+        if self.sc.nan_guard and sampling and logits_np is None:
+            logits_np = np.asarray(out["logits"])
+
+        poisoned: set[int] = set()
+        if self.sc.nan_guard and logits_np is not None:
+            poisoned = {i for i in sampling
+                        if not np.isfinite(logits_np[i]).all()}
 
         for i in active:
             slot = self.slots[i]
             slot["fed"] += n_tok[i]
             if slot["fed"] < len(slot["seq"]):
                 continue                        # still prefilling
+            if i in poisoned:
+                # fail the poisoned slot and release its blocks instead of
+                # sampling garbage into its stream; co-tenants are untouched
+                self._fail_request(slot["rid"], EngineError(
+                    f"request {slot['rid']}: non-finite decode logits "
+                    f"at tick {self._tick_no}", site="tick.logits",
+                    tick=self._tick_no, rid=slot["rid"]))
+                continue
             tok = int(nxt[i])
             slot["out"].append(tok)
             slot["last"] = tok
@@ -793,11 +1118,16 @@ class PagedServingEngine:
         s = {"ticks": self.ticks, "tokens_out": self.tokens_out,
              "peak_active": self.peak_active,
              "scheduler": self.scheduler.stats(),
-             "step_programs": len(self._steps)}
+             "step_programs": len(self._steps),
+             "health": self.health()}
         if self.pool is not None:
             s["pool"] = self.pool.check()
         if self.prefix_enabled:
             s["prefix_cache"] = self.prefix.stats()
+        if self.injector is not None:
+            s["faults_fired"] = self.injector.fired()
+        if self.executor is not None and self.executor.profile_error:
+            s["profile_error"] = self.executor.profile_error
         return s
 
 
@@ -808,7 +1138,15 @@ class AsyncServingEngine:
     immediately; a daemon thread ticks whenever work is pending and parks on
     a condition variable when idle.  `drain()` waits for in-flight requests
     to finish and stops the loop; the engine can also be used as a context
-    manager (`with AsyncServingEngine(...) as eng: ...` drains on exit)."""
+    manager (`with AsyncServingEngine(...) as eng: ...` drains on exit).
+
+    Fault tolerance: the engine's tick() already isolates per-request
+    failures; if a tick still raises (an engine bug past the isolation
+    layer), the loop records it as the TERMINAL error, fails every
+    outstanding handle via the engine's degraded transition, notifies all
+    waiters, and exits -- `drain()` then raises that terminal error instead
+    of spinning into a bare TimeoutError, and `health()` reports the
+    state."""
 
     def __init__(self, cfg: ArchConfig | None = None, params=None,
                  sc: ServeConfig | None = None, *,
@@ -818,6 +1156,7 @@ class AsyncServingEngine:
         self.engine = engine
         self._cond = threading.Condition()
         self._running = False
+        self._error: BaseException | None = None   # terminal loop error
         self._thread: threading.Thread | None = None
 
     def start(self) -> "AsyncServingEngine":
@@ -841,25 +1180,86 @@ class AsyncServingEngine:
                     return
             # tick OUTSIDE the lock: submissions only append to the
             # scheduler's deque, which tick consumes on its next admission
-            self.engine.tick()
+            try:
+                self.engine.tick()
+            except BaseException as exc:  # noqa: BLE001 -- loop must not die silently
+                with self._cond:
+                    self._error = exc
+                    try:
+                        self.engine._enter_degraded(
+                            exc if isinstance(exc, EngineError)
+                            else EngineError(f"tick loop died: {exc}",
+                                             site="engine.loop"))
+                    except Exception:     # noqa: BLE001 -- best-effort teardown
+                        pass
+                    self._running = False
+                    self._cond.notify_all()
+                return
+            with self._cond:
+                # every tick changes pending()/queue occupancy: wake drain()
+                # and any submit() blocked on backpressure
+                self._cond.notify_all()
+
+    def health(self) -> dict:
+        h = self.engine.health()
+        if self._error is not None:
+            h["loop_error"] = self._error
+        if self._thread is not None and not self._thread.is_alive():
+            h["loop_alive"] = False
+        return h
 
     def submit(self, prompt: list[int], rid: int | None = None,
-               max_new_tokens: int | None = None) -> RequestHandle:
+               max_new_tokens: int | None = None,
+               deadline_s: float | None = None,
+               queue_timeout: float | None = None) -> RequestHandle:
+        """Thread-safe submit.  On a full bounded queue (QueueFull):
+        `queue_timeout=None` re-raises immediately (explicit backpressure);
+        a number blocks up to that many seconds for the queue to shrink,
+        then raises."""
         if self._thread is None:
             self.start()
+        deadline = (None if queue_timeout is None
+                    else time.monotonic() + queue_timeout)
         with self._cond:
-            handle = self.engine.submit(prompt, rid=rid,
-                                        max_new_tokens=max_new_tokens)
-            self._cond.notify_all()
-        return handle
+            while True:
+                if self._error is not None:
+                    raise self._error
+                try:
+                    handle = self.engine.submit(
+                        prompt, rid=rid, max_new_tokens=max_new_tokens,
+                        deadline_s=deadline_s)
+                except QueueFull:
+                    if deadline is None:
+                        raise
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self._cond.wait(remaining):
+                        raise
+                    continue
+                self._cond.notify_all()
+                return handle
 
     def drain(self, timeout: float | None = None) -> dict[int, list[int]]:
-        """Graceful stop: wait for all in-flight work, then halt the loop."""
-        t0 = time.monotonic()
-        while self.engine.pending() > 0:
-            if timeout is not None and time.monotonic() - t0 > timeout:
-                raise TimeoutError("drain timed out with work pending")
-            time.sleep(0.001)
+        """Graceful stop: wait for all in-flight work, then halt the loop.
+        Raises the loop's TERMINAL error (not a bare TimeoutError) when the
+        tick thread died with work still pending."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self.engine.pending() > 0:
+                if self._error is not None:
+                    raise self._error
+                if self._running and (self._thread is None
+                                      or not self._thread.is_alive()):
+                    raise self._error or RuntimeError(
+                        "serve-tick thread died with work pending")
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    h = self.engine.health()
+                    raise TimeoutError(
+                        f"drain timed out with {self.engine.pending()} "
+                        f"requests pending (engine {h['state']}, "
+                        f"{h['ticks_since_progress']} ticks since progress)")
+                self._cond.wait(remaining if remaining is not None else 0.1)
         self.close()
         return self.engine.done
 
@@ -870,6 +1270,8 @@ class AsyncServingEngine:
         if self._thread is not None:
             self._thread.join(timeout=10)
             self._thread = None
+        if self.engine.state == "healthy":
+            self.engine.state = "stopped"
 
     def __enter__(self) -> "AsyncServingEngine":
         return self.start()

@@ -23,6 +23,12 @@ admission margin), the NEWEST admitted slot is torn down and its request --
 prompt plus everything generated so far -- goes back to the FRONT of the
 queue.  Greedy decoding makes the recompute exact, so a preempted request's
 final output is identical to an undisturbed run.
+
+Backpressure + deadlines (docs/SERVING.md "Failure model"): the waiting
+queue is optionally BOUNDED (`max_queue`; `submit` returns False when full
+and the engine raises QueueFull), and requests may carry an absolute
+deadline -- `expire(now)` culls queued-past-deadline requests before they
+waste prefill budget; the engine evicts in-flight expired slots itself.
 """
 from __future__ import annotations
 
@@ -39,6 +45,7 @@ class Request:
     handle: "object" = None            # serve.engine.RequestHandle
     max_new: int | None = None
     resume_out: list[int] = field(default_factory=list)
+    deadline: float | None = None      # absolute clock() time; None = never
 
     @property
     def feed(self) -> list[int]:
@@ -55,25 +62,53 @@ class Scheduler:
     """Host-side planning state: waiting queue + per-tick token budgeting."""
 
     def __init__(self, *, block_size: int, prefill_chunk: int,
-                 token_budget: int | None, n_slots: int):
+                 token_budget: int | None, n_slots: int,
+                 max_queue: int | None = None):
         self.bs = block_size
         self.chunk = max(1, prefill_chunk)
         # default budget: every slot decodes + one full prefill chunk rides
         self.budget = token_budget or (n_slots + self.chunk)
         self.n_slots = n_slots
+        self.max_queue = max_queue         # waiting-queue bound; None = ∞
         self.waiting: deque[Request] = deque()
         self.admit_seq = 0                 # monotonic admission stamp
         self.admitted = 0
         self.preemptions = 0
         self.rejected = 0
+        self.expired = 0                   # deadline failures (queued+in-flight)
 
-    def submit(self, req: Request) -> None:
+    @property
+    def queue_free(self) -> int | None:
+        """Remaining waiting-queue capacity (None = unbounded)."""
+        if self.max_queue is None:
+            return None
+        return max(0, self.max_queue - len(self.waiting))
+
+    def submit(self, req: Request) -> bool:
+        """Enqueue; False when the bounded queue is full (backpressure --
+        the caller decides whether to raise QueueFull or block)."""
+        if self.max_queue is not None and len(self.waiting) >= self.max_queue:
+            return False
         self.waiting.append(req)
+        return True
 
     def requeue(self, req: Request) -> None:
-        """Preempted request: back to the FRONT (it keeps its FCFS rank)."""
+        """Preempted request: back to the FRONT (it keeps its FCFS rank;
+        exempt from the queue bound -- it already held a seat)."""
         self.waiting.appendleft(req)
         self.preemptions += 1
+
+    def expire(self, now: float) -> list[Request]:
+        """Remove and return every waiting request whose deadline has
+        passed -- failing them BEFORE they waste prefill budget."""
+        dead = [r for r in self.waiting
+                if r.deadline is not None and now > r.deadline]
+        if dead:
+            gone = set(id(r) for r in dead)
+            self.waiting = deque(r for r in self.waiting
+                                 if id(r) not in gone)
+            self.expired += len(dead)
+        return dead
 
     # -- admission ---------------------------------------------------------
     def admission_cost(self, req: Request, reused_tokens: int = 0) -> int:
@@ -135,4 +170,5 @@ class Scheduler:
     def stats(self) -> dict:
         return {"waiting": len(self.waiting), "admitted": self.admitted,
                 "preemptions": self.preemptions, "rejected": self.rejected,
+                "expired": self.expired, "max_queue": self.max_queue,
                 "token_budget": self.budget}

@@ -1,0 +1,95 @@
+"""Crash-safety tests for the checkpointer (repro.checkpoint).
+
+Contract under test:
+  * a checkpoint directory without its COMMITTED marker is invisible to
+    committed_steps()/latest_step()/restore() -- a crash mid-save can never
+    be resumed from,
+  * a crash that leaves a half-written *.tmp staging dir (truncated leaf
+    files included) neither corrupts the previous committed step nor blocks
+    the next save from succeeding,
+  * no *.part staging file survives a completed save (everything is
+    os.replace'd into place before the directory is published),
+  * overwriting the same step is atomic: the old committed dir is retired
+    before the new one is renamed in,
+  * gc keeps only the newest `keep` committed steps.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(scale: float):
+    return {"w": scale * np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": scale * np.ones(4, np.float32)}
+
+
+def _assert_restored(ck, step, expect):
+    got = ck.restore(step, _tree(0.0))
+    for k, v in expect.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+
+
+class TestCrashSafety:
+    def test_uncommitted_step_is_ignored(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree(1.0))
+        # simulate a crash that produced a step dir without the marker
+        torn = tmp_path / "step_00000002"
+        torn.mkdir()
+        (torn / "w.npy").write_bytes(b"\x93NUMPY truncated")
+        assert ck.committed_steps() == [1]
+        assert ck.latest_step() == 1
+        with pytest.raises(FileNotFoundError, match="no committed"):
+            ck.restore(2, _tree(0.0))
+        _assert_restored(ck, 1, _tree(1.0))
+
+    def test_resume_after_crash_mid_save(self, tmp_path):
+        """Kill the writer halfway through step 2 -- a stale .tmp staging
+        dir with a TRUNCATED half-written leaf -- then resume: step 1 is
+        still the latest committed checkpoint, restores intact, and a fresh
+        save of step 2 succeeds over the debris."""
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree(1.0))
+        # forge the crash debris exactly as the writer would leave it: the
+        # staging dir exists, one leaf fully replaced, the next leaf's .part
+        # cut off mid-write, no manifest, no COMMITTED
+        good = ck.save(2, _tree(2.0))               # get real bytes to cut
+        full = open(os.path.join(good, "w.npy"), "rb").read()
+        shutil.rmtree(good)
+        tmp = tmp_path / "step_00000002.tmp"
+        tmp.mkdir()
+        (tmp / "w.npy").write_bytes(full)
+        (tmp / "b.npy.part").write_bytes(full[:len(full) // 2])
+
+        resumed = Checkpointer(str(tmp_path))       # fresh process resumes
+        assert resumed.latest_step() == 1
+        _assert_restored(resumed, 1, _tree(1.0))
+        resumed.save(2, _tree(2.0))                 # clears the stale .tmp
+        assert resumed.committed_steps() == [1, 2]
+        _assert_restored(resumed, 2, _tree(2.0))
+
+    def test_completed_save_leaves_no_staging_debris(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        path = ck.save(5, _tree(1.5), extra={"loss": 0.25})
+        assert not any(f.endswith(".part") for f in os.listdir(path))
+        assert not os.path.exists(path + ".tmp")
+        assert os.path.exists(os.path.join(path, "COMMITTED"))
+        assert ck.extra(5) == {"loss": 0.25}
+
+    def test_same_step_overwrite_stays_committed(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(3, _tree(1.0))
+        ck.save(3, _tree(7.0))
+        assert ck.committed_steps() == [3]
+        _assert_restored(ck, 3, _tree(7.0))
+
+    def test_gc_keeps_newest_committed(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3):
+            ck.save(s, _tree(float(s)))
+        assert ck.committed_steps() == [2, 3]
+        _assert_restored(ck, 3, _tree(3.0))

@@ -1,0 +1,510 @@
+"""Tests for the serving fault-tolerance layer (repro.serve.faults + the
+hardened engines).
+
+Contract under test (docs/SERVING.md "Failure model"):
+  * FAULT INJECTION is deterministic: a (plan, seed) pair always produces
+    the same schedule, and every fire is recorded in the injector history,
+  * ERROR ISOLATION: a fault at any site fails exactly the culpable request
+    with a structured EngineError(site, tick, rid); every co-tenant SURVIVOR
+    stays BITWISE identical to the fault-free run (which PR 5 pinned
+    bitwise-equal to serving each request alone) and the pool conserves
+    blocks,
+  * DEGRADED MODE: after max_tick_retries consecutive failing ticks the
+    engine stops guessing, fails every outstanding handle (nothing hangs),
+    reports via health(), and rejects new work,
+  * DEADLINES: queued requests expire before any prefill budget is spent;
+    in-flight requests are evicted at the next tick,
+  * BACKPRESSURE: a bounded queue raises QueueFull instead of growing
+    without limit; the async engine can block-with-timeout instead,
+  * ASYNC: a dead tick loop surfaces its TERMINAL error from drain() rather
+    than a bare TimeoutError, and a failed handle's stored error beats the
+    caller's result() timeout,
+  * CHAOS (property): under random multi-site schedules the engine never
+    deadlocks, every handle reaches a terminal state, and survivors remain
+    bitwise clean.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import (AsyncServingEngine, DeadlineExceeded, EngineError,
+                         FaultInjector, FaultSpec, PagedServingEngine,
+                         QueueFull, ServeConfig, parse_fault_plan)
+from repro.serve.engine import RequestHandle
+
+MAX_LEN = 24
+PROMPTS = {i: [3 + i, 17, 5] for i in range(4)}
+
+
+# module-level lazy caches rather than plain fixtures: the hypothesis-based
+# chaos property can't take pytest fixtures (the conftest fallback stub
+# wraps @given tests with a bare-*args signature), so both the fixtures and
+# the property draw from the same memoized helpers
+_CACHE: dict = {}
+
+
+def _dense():
+    if "dense" not in _CACHE:
+        cfg = get_config("gemma3-1b").reduced()
+        params = get_model(cfg).init(jax.random.PRNGKey(0))
+        _CACHE["dense"] = (cfg, params)
+    return _CACHE["dense"]
+
+
+def _paged(cfg, params, **kw):
+    clock = kw.pop("clock", None)
+    sc = ServeConfig(max_len=MAX_LEN, batch=2, num_blocks=16, **kw)
+    ekw = {"clock": clock} if clock is not None else {}
+    return PagedServingEngine(cfg, params, sc, eos_id=-1, **ekw)
+
+
+def _clean_oracle():
+    """The fault-free run of the exact engine config the fault tests use --
+    every survivor of every faulted run must match it bitwise."""
+    if "clean" not in _CACHE:
+        cfg, params = _dense()
+        eng = _paged(cfg, params)
+        for rid, p in PROMPTS.items():
+            eng.submit(p, rid=rid)
+        _CACHE["clean"] = eng.run_until_done()
+    return _CACHE["clean"]
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _dense()
+
+
+@pytest.fixture(scope="module")
+def clean_oracle():
+    return _clean_oracle()
+
+
+# ---------------------------------------------------------------------------
+# injector mechanics (no engine, no jax)
+# ---------------------------------------------------------------------------
+
+class TestInjector:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultSpec("pool.allok")
+        with pytest.raises(ValueError, match="mode"):
+            FaultSpec("tick.logits", mode="zero")
+
+    def test_unconditional_fires_every_probe(self):
+        inj = FaultInjector((FaultSpec("tick.step"),))
+        assert all(inj.check("tick.step") for _ in range(5))
+        assert inj.check("pool.alloc") is None      # other sites untouched
+        assert inj.fired("tick.step") == 5 and inj.fired() == 5
+
+    def test_tick_and_hit_schedules(self):
+        plan = (FaultSpec("tick.step", ticks=(2,)),
+                FaultSpec("pool.alloc", hits=(1, 3)))
+        inj = FaultInjector(plan)
+        fired_at = []
+        for t in range(4):
+            inj.advance(t)
+            if inj.check("tick.step"):
+                fired_at.append(t)
+        assert fired_at == [2]
+        allocs = [bool(inj.check("pool.alloc")) for _ in range(5)]
+        assert allocs == [False, True, False, True, False]
+        assert [h["site"] for h in inj.history] == \
+            ["tick.step", "pool.alloc", "pool.alloc"]
+
+    def test_probabilistic_schedule_is_seed_deterministic(self):
+        def run(seed):
+            inj = FaultInjector((FaultSpec("tick.step", p=0.3),), seed=seed)
+            return [bool(inj.check("tick.step")) for _ in range(64)]
+
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+        assert any(run(7)) and not all(run(7))
+
+    def test_parse_fault_plan(self):
+        plan = parse_fault_plan(
+            "tick.step@4,tick.logits@6&9:rid=3:mode=inf,pool.alloc@*:p=0.5")
+        assert plan == (FaultSpec("tick.step", ticks=(4,)),
+                        FaultSpec("tick.logits", ticks=(6, 9), rid=3,
+                                  mode="inf"),
+                        FaultSpec("pool.alloc", p=0.5))
+        assert not plan[0].unconditional and not plan[2].unconditional
+        assert parse_fault_plan("tick.step@*")[0].unconditional
+        with pytest.raises(ValueError, match="site@ticks"):
+            parse_fault_plan("tick.step")
+        with pytest.raises(ValueError, match="unknown fault option"):
+            parse_fault_plan("tick.step@1:boom=2")
+
+
+# ---------------------------------------------------------------------------
+# per-site isolation: one culprit fails, survivors stay bitwise clean
+# ---------------------------------------------------------------------------
+
+def _run_faulted(cfg, params, plan, **kw):
+    eng = _paged(cfg, params, fault_plan=plan, **kw)
+    handles = {rid: eng.submit(p, rid=rid) for rid, p in PROMPTS.items()}
+    done = eng.run_until_done()
+    return eng, handles, done
+
+
+def _assert_survivors_bitwise(eng, done, clean_oracle):
+    assert set(done) | set(eng.failed) == set(PROMPTS)
+    assert not set(done) & set(eng.failed)
+    for rid, out in done.items():
+        assert out == clean_oracle[rid], f"survivor {rid} diverged"
+    if eng.pool is not None:
+        assert eng.pool.check()["active"] == 0      # everything released
+
+
+class TestSiteIsolation:
+    def test_tick_step_fails_only_blamed_request(self, dense, clean_oracle):
+        cfg, params = dense
+        eng, handles, done = _run_faulted(
+            cfg, params, (FaultSpec("tick.step", ticks=(3,), rid=1),))
+        assert set(eng.failed) == {1}
+        err = eng.failed[1]
+        assert isinstance(err, EngineError)
+        assert err.site == "tick.step" and err.tick == 3 and err.rid == 1
+        with pytest.raises(EngineError):
+            handles[1].result(timeout=0)
+        _assert_survivors_bitwise(eng, done, clean_oracle)
+        # one failed tick, then recovery: the engine is healthy at the end
+        h = eng.health()
+        assert h["state"] == "healthy" and h["consecutive_failures"] == 0
+        assert eng.injector.fired("tick.step") == 1
+
+    def test_nan_guard_catches_poisoned_logits(self, dense, clean_oracle):
+        cfg, params = dense
+        eng, handles, done = _run_faulted(
+            cfg, params, (FaultSpec("tick.logits", ticks=(6,), rid=0),),
+            nan_guard=True)
+        assert set(eng.failed) == {0}
+        assert eng.failed[0].site == "tick.logits"
+        assert handles[0].error() is eng.failed[0]
+        _assert_survivors_bitwise(eng, done, clean_oracle)
+        assert eng.health()["state"] == "healthy"
+
+    def test_guard_off_poison_never_leaks_to_cotenants(self, dense,
+                                                       clean_oracle):
+        """Without the guard the poisoned request streams a derailed token
+        (that is the point of opting in) -- but the corruption is host-side
+        only, so every OTHER request still matches the clean run bitwise."""
+        cfg, params = dense
+        eng, _, done = _run_faulted(
+            cfg, params, (FaultSpec("tick.logits", ticks=(6,), rid=0),),
+            nan_guard=False)
+        assert eng.failed == {} and set(done) == set(PROMPTS)
+        for rid in (1, 2, 3):
+            assert done[rid] == clean_oracle[rid]
+
+    def test_pool_alloc_fault_recovers_by_preemption(self, dense,
+                                                     clean_oracle):
+        """An injected OutOfBlocks on one alloc goes down the existing
+        preemption-by-recompute path: nobody fails, everything bitwise."""
+        cfg, params = dense
+        eng, _, done = _run_faulted(
+            cfg, params, (FaultSpec("pool.alloc", hits=(3,)),))
+        assert eng.failed == {}
+        assert done == clean_oracle
+        assert eng.stats()["scheduler"]["preemptions"] >= 1
+        assert eng.injector.fired("pool.alloc") == 1
+
+    def test_prefill_chunk_transient_retries_clean(self, dense, clean_oracle):
+        cfg, params = dense
+        eng, _, done = _run_faulted(
+            cfg, params, (FaultSpec("prefill.chunk", ticks=(0,)),))
+        assert eng.failed == {}
+        assert done == clean_oracle
+        assert eng.injector.fired("prefill.chunk") == 1
+
+    def test_prefill_chunk_persistent_fails_victim(self, dense, clean_oracle):
+        """An unconditional chunk fault starves the newest prefilling slot
+        every tick: past max_chunk_retries that request fails -- but the
+        oldest slot prefilled unimpeded and must stay bitwise clean."""
+        cfg, params = dense
+        eng, _, done = _run_faulted(
+            cfg, params, (FaultSpec("prefill.chunk"),))
+        assert 0 in done and done[0] == clean_oracle[0]
+        assert set(eng.failed) == {1, 2, 3}
+        assert all(e.site == "prefill.chunk" for e in eng.failed.values())
+        assert eng.health()["state"] == "healthy"
+
+    def test_profile_oom_falls_back_to_floor_capacity(self, dense):
+        """An OOM in the capacity profiling pass must not kill engine
+        construction: the pool falls back to the guaranteed-viable floor
+        (max_blocks + batch) and the engine serves correctly, reporting the
+        profile error in stats()."""
+        cfg, params = dense
+        sc = ServeConfig(max_len=MAX_LEN, batch=2, num_blocks=None,
+                         fault_plan=(FaultSpec("executor.profile"),))
+        eng = PagedServingEngine(cfg, params, sc, eos_id=-1)
+        assert eng.pool.num_blocks == eng.max_blocks + 2
+        assert "injected OOM" in eng.executor.profile_error
+        eng.submit(PROMPTS[0], rid=0)
+        done = eng.run_until_done()
+        assert set(done) == {0} and eng.failed == {}
+        assert "injected OOM" in eng.stats()["profile_error"]
+
+
+# ---------------------------------------------------------------------------
+# degraded mode
+# ---------------------------------------------------------------------------
+
+class TestDegradedMode:
+    def test_consecutive_failures_degrade_and_fail_everything(self, dense):
+        cfg, params = dense
+        eng, handles, done = _run_faulted(
+            cfg, params, (FaultSpec("tick.step"),))   # every tick fails
+        assert done == {}
+        h = eng.health()
+        assert h["state"] == "degraded"
+        assert h["consecutive_failures"] >= eng.sc.max_tick_retries
+        assert h["last_error"].site == "tick.step"
+        # every handle reached a terminal state: nothing can hang on it
+        assert set(eng.failed) == set(PROMPTS)
+        for hd in handles.values():
+            assert hd.done() and hd.error() is not None
+        assert eng.pending() == 0 and eng.tick() == 0
+        assert eng.pool.check()["active"] == 0
+
+    def test_degraded_engine_rejects_new_work(self, dense):
+        cfg, params = dense
+        eng, _, _ = _run_faulted(cfg, params, (FaultSpec("tick.step"),))
+        hd = eng.submit([5, 6, 7], rid=99)
+        assert hd.done()
+        assert isinstance(hd.error(), EngineError)
+        assert hd.error().site == "engine.degraded"
+        with pytest.raises(EngineError, match="degraded"):
+            hd.result(timeout=0)
+
+    def test_blame_isolation_beats_degradation(self, dense, clean_oracle):
+        """Three SPACED-OUT failures never degrade the engine: the counter
+        is CONSECUTIVE failing ticks, and successful ticks reset it."""
+        cfg, params = dense
+        eng, _, done = _run_faulted(
+            cfg, params, (FaultSpec("tick.step", ticks=(3,), rid=1),
+                          FaultSpec("tick.step", ticks=(8,), rid=2),
+                          FaultSpec("tick.step", ticks=(13,), rid=3)))
+        assert eng.health()["state"] == "healthy"
+        assert set(eng.failed) == {1, 2, 3}
+        _assert_survivors_bitwise(eng, done, clean_oracle)
+
+
+# ---------------------------------------------------------------------------
+# deadlines + backpressure
+# ---------------------------------------------------------------------------
+
+class TestDeadlines:
+    def test_queued_request_expires_before_prefill(self, dense, clean_oracle):
+        cfg, params = dense
+        now = [0.0]
+        eng = _paged(cfg, params, clock=lambda: now[0])
+        eng.submit(PROMPTS[0], rid=0)
+        eng.submit(PROMPTS[1], rid=1)
+        h2 = eng.submit(PROMPTS[2], rid=2, deadline_s=5.0)  # waits for a slot
+        now[0] = 10.0                        # deadline passes while queued
+        done = eng.run_until_done()
+        assert set(eng.failed) == {2}
+        err = eng.failed[2]
+        assert isinstance(err, DeadlineExceeded) and err.site == \
+            "engine.deadline"
+        assert "queue" in str(err)           # expired BEFORE any prefill
+        with pytest.raises(DeadlineExceeded):
+            h2.result(timeout=0)
+        assert done == {0: clean_oracle[0], 1: clean_oracle[1]}
+        assert eng.stats()["scheduler"]["expired"] == 1
+
+    def test_in_flight_request_evicted_at_deadline(self, dense, clean_oracle):
+        cfg, params = dense
+        now = [0.0]
+        eng = _paged(cfg, params, clock=lambda: now[0])
+        h0 = eng.submit(PROMPTS[0], rid=0, deadline_s=5.0)
+        eng.submit(PROMPTS[1], rid=1)
+        for _ in range(5):                   # partial progress under deadline
+            eng.tick()
+        assert len(h0.tokens()) > 0
+        now[0] = 6.0
+        done = eng.run_until_done()
+        assert set(eng.failed) == {0}
+        err = eng.failed[0]
+        assert isinstance(err, DeadlineExceeded) and "in flight" in str(err)
+        assert done == {1: clean_oracle[1]}  # the co-tenant is untouched
+        assert eng.pool.check()["active"] == 0
+
+    def test_config_default_deadline_applies(self, dense):
+        cfg, params = dense
+        now = [0.0]
+        eng = _paged(cfg, params, clock=lambda: now[0],
+                     default_deadline_s=5.0)
+        eng.submit(PROMPTS[0], rid=0)
+        now[0] = 10.0
+        eng.run_until_done()
+        assert isinstance(eng.failed.get(0), DeadlineExceeded)
+
+
+class TestBackpressure:
+    def test_bounded_queue_raises_queue_full(self, dense, clean_oracle):
+        cfg, params = dense
+        eng = _paged(cfg, params, max_queue=2)
+        eng.submit(PROMPTS[0], rid=0)
+        eng.submit(PROMPTS[1], rid=1)
+        with pytest.raises(QueueFull) as ei:
+            eng.submit(PROMPTS[2], rid=2)
+        assert ei.value.site == "engine.queue"
+        assert 2 not in eng.handles          # rejected, not leaked
+        # a tick admits the two waiting requests; capacity frees up
+        eng.tick()
+        assert eng.scheduler.queue_free == 2
+        eng.submit(PROMPTS[2], rid=2)
+        done = eng.run_until_done()
+        assert {rid: done[rid] for rid in (0, 1, 2)} == \
+            {rid: clean_oracle[rid] for rid in (0, 1, 2)}
+
+    def test_preemption_requeue_exempt_from_bound(self, dense):
+        """A preempted request requeues at the FRONT even when the bounded
+        queue is already at capacity -- it held a seat; only NEW admissions
+        feel the backpressure."""
+        cfg, params = dense
+        sc = ServeConfig(max_len=MAX_LEN, batch=2, num_blocks=5, max_queue=1)
+        eng = PagedServingEngine(cfg, params, sc, eos_id=-1)
+        eng.submit(PROMPTS[0], rid=0)
+        eng.tick()                           # admit 0
+        eng.submit(PROMPTS[1], rid=1)
+        eng.tick()                           # admit 1
+        eng.submit(PROMPTS[2], rid=2)        # fills the bound (queue = [2])
+        done = eng.run_until_done()          # growth dries the 5-block pool
+        assert eng.stats()["scheduler"]["preemptions"] >= 1
+        assert set(done) == {0, 1, 2} and eng.pending() == 0
+        assert eng.pool.check()["active"] == 0
+
+
+# ---------------------------------------------------------------------------
+# async engine: terminal errors, result ordering, blocking submit
+# ---------------------------------------------------------------------------
+
+class TestAsyncFaults:
+    @pytest.mark.timeout(120)
+    def test_culprit_handle_raises_survivors_stream(self, dense,
+                                                    clean_oracle):
+        cfg, params = dense
+        plan = (FaultSpec("tick.step", ticks=(3,), rid=1),)
+        with AsyncServingEngine(engine=_paged(cfg, params,
+                                              fault_plan=plan)) as eng:
+            handles = {rid: eng.submit(p, rid=rid)
+                       for rid, p in PROMPTS.items()}
+            with pytest.raises(EngineError) as ei:
+                handles[1].result(timeout=120)
+            assert ei.value.site == "tick.step" and ei.value.rid == 1
+            outs = {rid: handles[rid].result(timeout=120)
+                    for rid in (0, 2, 3)}
+        assert outs == {rid: clean_oracle[rid] for rid in (0, 2, 3)}
+        assert eng.engine.state == "stopped"         # clean close()
+
+    @pytest.mark.timeout(60)
+    def test_drain_raises_terminal_error_not_timeout(self, dense):
+        """A tick loop killed by an engine bug PAST the isolation layer must
+        surface that error from drain(), not spin into a bare timeout."""
+        cfg, params = dense
+        inner = _paged(cfg, params)
+        inner.tick = lambda: (_ for _ in ()).throw(ZeroDivisionError("bug"))
+        inner._enter_degraded = lambda err: None     # keep work pending
+        eng = AsyncServingEngine(engine=inner)
+        eng.submit(PROMPTS[0], rid=0)
+        with pytest.raises(ZeroDivisionError):
+            eng.drain(timeout=30)
+        h = eng.health()
+        assert isinstance(h["loop_error"], ZeroDivisionError)
+        assert h.get("loop_alive") is False
+        eng.close()
+
+    @pytest.mark.timeout(60)
+    def test_loop_death_degrades_engine_and_fails_handles(self, dense):
+        cfg, params = dense
+        inner = _paged(cfg, params)
+        inner.tick = lambda: (_ for _ in ()).throw(RuntimeError("dead"))
+        eng = AsyncServingEngine(engine=inner)
+        h = eng.submit(PROMPTS[0], rid=0)
+        with pytest.raises(EngineError, match="degraded"):
+            h.result(timeout=30)
+        assert inner.state == "degraded"
+        eng.close()
+
+    def test_result_prefers_stored_error_over_timeout(self):
+        h = RequestHandle(7, [1, 2])
+        h._fail(EngineError("boom", site="tick.step", tick=4, rid=7))
+        with pytest.raises(EngineError, match="boom"):
+            h.result(timeout=0)
+
+    def test_result_timeout_names_rid_and_progress(self):
+        h = RequestHandle(7, [1, 2])
+        h._append(11)
+        h._append(12)
+        with pytest.raises(TimeoutError, match=r"request 7 .*2 tokens"):
+            h.result(timeout=0.01)
+
+    @pytest.mark.timeout(120)
+    def test_blocking_submit_rides_out_backpressure(self, dense,
+                                                    clean_oracle):
+        cfg, params = dense
+        with AsyncServingEngine(engine=_paged(cfg, params,
+                                              max_queue=1)) as eng:
+            handles = {rid: eng.submit(p, rid=rid, queue_timeout=60)
+                       for rid, p in PROMPTS.items()}
+            outs = {rid: h.result(timeout=120) for rid, h in handles.items()}
+        assert outs == clean_oracle
+
+    @pytest.mark.timeout(60)
+    def test_submit_queue_full_immediate_and_timed(self, dense):
+        cfg, params = dense
+        eng = AsyncServingEngine(engine=_paged(cfg, params, max_queue=0))
+        with pytest.raises(QueueFull):
+            eng.submit(PROMPTS[0], rid=0)                # no waiting
+        with pytest.raises(QueueFull):
+            eng.submit(PROMPTS[0], rid=0, queue_timeout=0.3)   # blocks, then
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos property: random multi-site schedules
+# ---------------------------------------------------------------------------
+
+class TestChaosProperty:
+    @pytest.mark.timeout(600)
+    @settings(deadline=None, max_examples=6)
+    @given(step_tick=st.integers(min_value=0, max_value=10),
+           logits_tick=st.integers(min_value=0, max_value=10),
+           alloc_hit=st.integers(min_value=0, max_value=20),
+           chunk_p=st.floats(min_value=0.0, max_value=0.3),
+           seed=st.integers(min_value=0, max_value=1 << 16))
+    def test_engine_survives_random_schedules(self, step_tick, logits_tick,
+                                              alloc_hit, chunk_p, seed):
+        """Whatever the schedule: the run terminates (no deadlock), every
+        handle reaches a terminal state, done/failed partition the request
+        set, the pool conserves its blocks, and survivors are bitwise."""
+        cfg, params = _dense()
+        clean_oracle = _clean_oracle()
+        plan = (FaultSpec("tick.step", ticks=(step_tick,)),
+                FaultSpec("tick.logits", ticks=(logits_tick,)),
+                FaultSpec("pool.alloc", hits=(alloc_hit,)),
+                FaultSpec("prefill.chunk", p=chunk_p))
+        eng = _paged(cfg, params, fault_plan=plan, fault_seed=seed,
+                     nan_guard=True)
+        handles = {rid: eng.submit(p, rid=rid) for rid, p in PROMPTS.items()}
+        done = eng.run_until_done(max_ticks=500)
+        assert eng.pending() == 0                    # terminated, no hang
+        assert set(done) | set(eng.failed) == set(PROMPTS)
+        assert not set(done) & set(eng.failed)
+        for h in handles.values():
+            assert h.done()                          # every handle terminal
+        for rid, err in eng.failed.items():
+            assert isinstance(err, EngineError) and err.site is not None
+        pool = eng.pool.check()                      # conservation asserted
+        assert pool["active"] == 0
+        assert eng.health()["state"] in ("healthy", "degraded")
+        for rid, out in done.items():
+            assert out == clean_oracle[rid], f"survivor {rid} diverged"
