@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any
@@ -35,6 +36,13 @@ def _flatten(tree) -> dict[str, Any]:
                         for k in kp)
 
     return {name(kp): v for kp, v in flat}
+
+
+# A published checkpoint dir is EXACTLY step_<digits>; anything else --
+# notably a step_N.tmp staging dir, which briefly holds its own COMMITTED
+# marker before the publishing rename -- is crash debris and must never be
+# treated as committed (or int()-parsed as a step number).
+_STEP_DIR = re.compile(r"^step_(\d+)$")
 
 
 class Checkpointer:
@@ -59,9 +67,10 @@ class Checkpointer:
             # file written to a .part name and os.replace'd into place, and
             # the whole directory is published by ONE atomic rename.  A
             # crash at any point leaves either the previous committed step
-            # intact or a *.tmp orphan that restore ignores; there is no
-            # window where a half-written file sits under a COMMITTED
-            # marker.
+            # intact or a *.tmp orphan that restore ignores -- including
+            # the window after COMMITTED is staged but before the rename,
+            # which is why committed_steps() matches ^step_<digits>$
+            # exactly rather than trusting the marker alone.
             path = os.path.join(self.dir, f"step_{step:08d}")
             tmp = path + ".tmp"
             if os.path.exists(tmp):
@@ -119,9 +128,10 @@ class Checkpointer:
     def committed_steps(self) -> list[int]:
         out = []
         for d in sorted(os.listdir(self.dir)):
-            if d.startswith("step_") and os.path.exists(
+            m = _STEP_DIR.match(d)
+            if m and os.path.exists(
                     os.path.join(self.dir, d, "COMMITTED")):
-                out.append(int(d.split("_")[1]))
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> int | None:

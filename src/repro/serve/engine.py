@@ -870,6 +870,33 @@ class PagedServingEngine:
             if req.handle is not None:
                 req.handle._fail(tomb)
 
+    def _fail_stragglers(self) -> None:
+        """Late racers: submit() can check state == 'healthy' on the caller
+        thread, lose the race with the tick thread's degraded transition,
+        and append to the waiting queue AFTER _enter_degraded() drained it.
+        Every non-healthy tick() sweeps such leftovers (queued requests and
+        any live slots) into terminal failures so pending() reaches 0 and
+        drain()/result() raise instead of hanging."""
+        cause = self.last_error
+        suffix = "" if cause is None else f": {cause}"
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                tomb = EngineError(
+                    f"engine is {self.state}{suffix}",
+                    site="engine." + self.state, tick=self.ticks,
+                    rid=s["rid"])
+                self.failed[s["rid"]] = tomb
+                s["handle"]._fail(tomb)
+                self._release(i, cache_prefix=False)
+        while self.scheduler.waiting:
+            req = self.scheduler.waiting.popleft()
+            tomb = EngineError(
+                f"engine is {self.state}{suffix}",
+                site="engine." + self.state, tick=self.ticks, rid=req.rid)
+            self.failed[req.rid] = tomb
+            if req.handle is not None:
+                req.handle._fail(tomb)
+
     def _expire_deadlines(self) -> None:
         now = self.clock()
         for req in self.scheduler.expire(now):
@@ -915,6 +942,7 @@ class PagedServingEngine:
         failing ticks the engine stops guessing and enters the terminal
         degraded state (health()) with every remaining handle failed."""
         if self.state != "healthy":
+            self._fail_stragglers()
             return 0
         t = self.ticks                   # this attempt's tick number
         self.ticks = t + 1               # failed ticks advance the clock too

@@ -100,14 +100,22 @@ class Scheduler:
 
     def expire(self, now: float) -> list[Request]:
         """Remove and return every waiting request whose deadline has
-        passed -- failing them BEFORE they waste prefill budget."""
+        passed -- failing them BEFORE they waste prefill budget.
+
+        Mutates `waiting` IN PLACE (one deque.remove per victim), never
+        replacing the deque object: AsyncServingEngine.submit() appends to
+        this deque from the caller thread while the tick thread expires,
+        and a rebuilt-deque swap would silently drop any append that
+        landed on the old object mid-rebuild (the handle would then never
+        reach a terminal state)."""
         dead = [r for r in self.waiting
                 if r.deadline is not None and now > r.deadline]
-        if dead:
-            gone = set(id(r) for r in dead)
-            self.waiting = deque(r for r in self.waiting
-                                 if id(r) not in gone)
-            self.expired += len(dead)
+        for r in dead:
+            try:
+                self.waiting.remove(r)
+            except ValueError:          # already popped by a racer
+                pass
+        self.expired += len(dead)
         return dead
 
     # -- admission ---------------------------------------------------------

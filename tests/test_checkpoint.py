@@ -7,6 +7,9 @@ Contract under test:
   * a crash that leaves a half-written *.tmp staging dir (truncated leaf
     files included) neither corrupts the previous committed step nor blocks
     the next save from succeeding,
+  * a *.tmp staging dir is ignored EVEN when it already contains its own
+    COMMITTED marker (crash between staging the marker and the publishing
+    rename) -- only ^step_<digits>$ dirs are ever parsed as steps,
   * no *.part staging file survives a completed save (everything is
     os.replace'd into place before the directory is published),
   * overwriting the same step is atomic: the old committed dir is retired
@@ -71,6 +74,29 @@ class TestCrashSafety:
         resumed.save(2, _tree(2.0))                 # clears the stale .tmp
         assert resumed.committed_steps() == [1, 2]
         _assert_restored(resumed, 2, _tree(2.0))
+
+    def test_tmp_dir_with_committed_marker_is_ignored(self, tmp_path):
+        """Crash in the WORST window: after COMMITTED itself was staged
+        into step_N.tmp but before the publishing os.replace.  The debris
+        dir holds a valid-looking marker, yet it must stay invisible to
+        committed_steps()/latest_step()/restore()/_gc() -- and must never
+        crash step-number parsing (int('00000002.tmp'))."""
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree(1.0))
+        good = ck.save(2, _tree(2.0))               # get real staged bytes
+        tmp = tmp_path / "step_00000003.tmp"
+        shutil.copytree(good, tmp)                  # full dir incl. COMMITTED
+        assert (tmp / "COMMITTED").exists()
+
+        resumed = Checkpointer(str(tmp_path))       # fresh process resumes
+        assert resumed.committed_steps() == [1, 2]  # no ValueError, no ghost
+        assert resumed.latest_step() == 2
+        _assert_restored(resumed, 2, _tree(2.0))
+        with pytest.raises(FileNotFoundError, match="no committed"):
+            resumed.restore(3, _tree(0.0))
+        resumed.save(3, _tree(3.0))                 # overwrites the debris
+        assert resumed.committed_steps() == [1, 2, 3]
+        _assert_restored(resumed, 3, _tree(3.0))
 
     def test_completed_save_leaves_no_staging_debris(self, tmp_path):
         ck = Checkpointer(str(tmp_path))

@@ -282,6 +282,33 @@ class TestDegradedMode:
         with pytest.raises(EngineError, match="degraded"):
             hd.result(timeout=0)
 
+    def test_degraded_tick_sweeps_late_racers(self, dense):
+        """A submit() racing the degraded transition can append to the
+        waiting queue AFTER _enter_degraded() drained it (the async engine
+        ticks outside the submit lock).  The next tick() must fail such
+        stragglers -- pending() reaches 0 and the handle is terminal --
+        instead of returning early and stranding them forever."""
+        from repro.serve.scheduler import Request
+
+        cfg, params = dense
+        eng, _, _ = _run_faulted(cfg, params, (FaultSpec("tick.step"),))
+        assert eng.health()["state"] == "degraded" and eng.pending() == 0
+        # forge the race: the request is already past submit()'s state
+        # check, so it lands directly in the scheduler's queue
+        hd = RequestHandle(99, [5, 6, 7])
+        eng.handles[99] = hd
+        eng.scheduler.waiting.append(
+            Request(rid=99, prompt=[5, 6, 7], handle=hd))
+        assert eng.pending() == 1
+        assert eng.tick() == 0
+        assert eng.pending() == 0
+        assert hd.done()
+        err = hd.error()
+        assert isinstance(err, EngineError) and err.site == "engine.degraded"
+        assert eng.failed[99] is err
+        with pytest.raises(EngineError, match="degraded"):
+            hd.result(timeout=0)
+
     def test_blame_isolation_beats_degradation(self, dense, clean_oracle):
         """Three SPACED-OUT failures never degrade the engine: the counter
         is CONSECUTIVE failing ticks, and successful ticks reset it."""

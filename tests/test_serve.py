@@ -236,6 +236,33 @@ class TestSchedulerProperties:
                               "seq": req.feed, "fed": 0}
         assert pool.active_count <= num_blocks
 
+    def test_expire_mutates_queue_in_place(self):
+        """expire() must never REPLACE the waiting deque: the async engine's
+        submit() appends to it from another thread, and a rebuilt-deque swap
+        would silently drop an append that landed on the old object (the
+        handle would then never be scheduled or failed).  Contract: same
+        deque object before and after, expired requests removed, survivor
+        order preserved."""
+        sched = Scheduler(block_size=4, prefill_chunk=4,
+                          token_budget=None, n_slots=2)
+        reqs = [Request(rid=i, prompt=[i],
+                        deadline=(5.0 if i % 2 else None))
+                for i in range(6)]
+        for r in reqs:
+            sched.submit(r)
+        q = sched.waiting                       # the object submit() holds
+        dead = sched.expire(now=10.0)
+        assert sched.waiting is q               # in-place, never swapped
+        assert [r.rid for r in dead] == [1, 3, 5]
+        assert [r.rid for r in q] == [0, 2, 4]  # FCFS order preserved
+        assert sched.expired == 3
+        # a racer's append through a stale reference is still visible
+        racer = Request(rid=99, prompt=[9])
+        q.append(racer)
+        assert racer in sched.waiting
+        assert sched.expire(now=10.0) == []     # idempotent; racer survives
+        assert [r.rid for r in sched.waiting] == [0, 2, 4, 99]
+
     @settings(deadline=None, max_examples=30)
     @given(budget=st.integers(min_value=1, max_value=8),
            fed=st.lists(st.integers(min_value=0, max_value=10),
