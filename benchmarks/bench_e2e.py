@@ -242,6 +242,134 @@ def measured_train_e2e(csv=True, iters=10):
     return rows
 
 
+def dedupe_smoke(csv=True):
+    """Structural-dedupe axis: paper-scale depth via repeated layers.
+
+    Each case compiles a repeated-structure workload twice -- dedupe pass
+    OFF then ON -- on a cold executable cache and records trace+compile+
+    first-run wall-clock, the executable count actually compiled (first-run
+    cache misses), and the dedupe hit-rate.  Outputs are checked BITWISE
+    between the two compiles: sharing executables across structurally equal
+    programs must never change a result.
+
+    The smoke gate (run.py `check_dedupe_gate`) reads these rows: a case
+    where `executables_on` exceeds `n_classes` means some structural class
+    compiled more than one executable -- the dedupe contract broke."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.executor import clear_executable_cache
+    from repro.models import zoo as zoo_mod
+
+    def _bitwise(a_tree, b_tree):
+        la = jax.tree_util.tree_leaves(a_tree)
+        lb = jax.tree_util.tree_leaves(b_tree)
+        return (len(la) == len(lb) and
+                all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                    for a, b in zip(la, lb)))
+
+    def forward_case(cfg_name):
+        cfg = get_config(cfg_name).reduced()
+        deep = dataclasses.replace(cfg, n_layers=2 * cfg.n_layers)
+        zf = zoo_mod.build(deep, batch=1, seq=8, reduced=False)
+
+        def one(disable):
+            clear_executable_cache()
+            t0 = time.perf_counter()
+            app = repro.compile(zf.fn, zf.example_inputs,
+                                CompilerOptions(mode="kitsune", hw=HW,
+                                                disable=disable))
+            rep = app.run(app.traced.feeds(*zf.example_inputs))
+            ms = (time.perf_counter() - t0) * 1e3
+            trace_ms = sum(r.seconds for r in app.pass_records
+                           if r.name == "trace") * 1e3
+            return app, rep, trace_ms, ms
+
+        app_off, rep_off, _, ms_off = one(("dedupe",))
+        app_on, rep_on, trace_ms, ms_on = one(())
+        stats = app_on.dedupe_stats()
+        return {
+            "n_layers": deep.n_layers,
+            "trace_ms": round(trace_ms, 1),
+            "n_programs": stats["n_programs"],
+            "n_classes": stats["n_classes"],
+            "hit_rate": round(stats["hit_rate"], 3),
+            "executables_on": rep_on.cache_misses,
+            "executables_off": rep_off.cache_misses,
+            "compile_run_ms_on": round(ms_on, 1),
+            "compile_run_ms_off": round(ms_off, 1),
+            "ms_reduction": round(1.0 - ms_on / max(ms_off, 1e-9), 3),
+            "bitwise_equal": _bitwise(
+                [rep_on.outputs[k] for k in sorted(rep_on.outputs)],
+                [rep_off.outputs[k] for k in sorted(rep_off.outputs)]),
+        }
+
+    def train_case(cfg_name, microbatches=4):
+        import jax.numpy as jnp
+
+        from repro.optim import adamw
+        from repro.train import (TrainConfig, compile_train_step,
+                                 make_train_state)
+        cfg = get_config(cfg_name).reduced()
+        opt = adamw(1e-3)
+        tc = TrainConfig(remat=False, xent_chunk=8,
+                         microbatches=microbatches)
+        state0 = make_train_state(cfg, opt, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (microbatches, 12), 0, cfg.vocab)}
+
+        def one(disable):
+            clear_executable_cache()
+            s = jax.tree.map(lambda x: jnp.array(x, copy=True), state0)
+            t0 = time.perf_counter()
+            app = compile_train_step(cfg, opt, tc, state=s, batch=batch,
+                                     donate_state=False, disable=disable,
+                                     hw=HW)
+            out_state, metrics = app(s, batch)
+            return app, (out_state, metrics), (time.perf_counter() - t0) * 1e3
+
+        app_off, out_off, ms_off = one(("dedupe",))
+        app_on, out_on, ms_on = one(())
+        stats = app_on.dedupe_stats()
+        return {
+            "microbatches": microbatches,
+            "n_programs": stats["n_programs"],
+            "n_classes": stats["n_classes"],
+            "hit_rate": round(stats["hit_rate"], 3),
+            "executables_on": stats["n_classes"],
+            "executables_off": stats["n_programs"],
+            "compile_run_ms_on": round(ms_on, 1),
+            "compile_run_ms_off": round(ms_off, 1),
+            "ms_reduction": round(1.0 - ms_on / max(ms_off, 1e-9), 3),
+            "bitwise_equal": _bitwise(out_on, out_off),
+        }
+
+    rows = {
+        # gemma3's dense layer stack fuses into ONE sf program (runs break
+        # only at gather/scatter), so the gate checks one-exe-per-structure
+        # there; the MoE graph and the unrolled microbatch loop repeat at
+        # program granularity and must actually SHARE.
+        "gemma3-1b@2x": dict(forward_case("gemma3-1b"),
+                             expect_sharing=False),
+        "grok-1-314b@2x": dict(forward_case("grok-1-314b"),
+                               expect_sharing=True),
+        "train_qwen_mb4": dict(train_case("qwen1.5-32b"),
+                               expect_sharing=True),
+    }
+    if csv:
+        for name, r in rows.items():
+            print(f"dedupe_{name},{r['compile_run_ms_on'] * 1e3:.0f},"
+                  f"classes={r['n_classes']}/{r['n_programs']}"
+                  f";hit={r['hit_rate']:.2f}"
+                  f";exes={r['executables_on']}/{r['executables_off']}"
+                  f";ms_red={r['ms_reduction']:.2f}"
+                  f";bitwise={r['bitwise_equal']}")
+    return rows
+
+
 def main(csv=True, zoo=None):
     inf, tr = [], []
     for name, make in APPS.items():

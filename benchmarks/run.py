@@ -7,7 +7,11 @@ that accumulates a BENCH_*.json trajectory across commits.  Since schema 4
 the smoke run also REGRESSION-CHECKS lowering: per measured app,
 `kitsune.us_per_call` must not exceed `kitsune_nolower.us_per_call` beyond
 a noise tolerance (the cost/measurement verdicts in core/lower.py exist to
-guarantee this); violations print a diff table and exit nonzero."""
+guarantee this); violations print a diff table and exit nonzero.  Since
+schema 6 it also gates structural dedupe: repeated-layer / microbatch
+workloads must compile exactly ONE executable per unique program structure
+(bench_e2e.dedupe_smoke + check_dedupe_gate), bitwise-equal to the
+dedupe-off compile."""
 from __future__ import annotations
 
 import json
@@ -46,6 +50,31 @@ def check_lowering_regressions(apps_measured: dict,
             violations.append(entry)
     return {"violations": violations, "table": table,
             "rel_tol": rel_tol, "abs_tol_us": abs_tol_us}
+
+
+def check_dedupe_gate(dedupe_rows: dict) -> dict:
+    """Structural-dedupe gate over `bench_e2e.dedupe_smoke` rows.
+
+    A case violates when (a) dedupe-on compiled MORE than one executable per
+    unique program structure (`executables_on > n_classes`), or (b) sharing
+    changed a result (`bitwise_equal` false), or (c) a case whose program
+    list repeats structurally (`expect_sharing`, e.g. the MoE 2x-layer graph
+    or the unrolled microbatch loop) shows no sharing (`n_classes ==
+    n_programs`) -- the canonical identity regressed."""
+    table, violations = [], []
+    for name, r in sorted(dedupe_rows.items()):
+        ok = (r["executables_on"] <= r["n_classes"]
+              and r["bitwise_equal"]
+              and (not r.get("expect_sharing")
+                   or r["n_classes"] < r["n_programs"]))
+        entry = {"case": name, "executables_on": r["executables_on"],
+                 "n_classes": r["n_classes"], "n_programs": r["n_programs"],
+                 "hit_rate": r["hit_rate"],
+                 "bitwise_equal": r["bitwise_equal"], "ok": ok}
+        table.append(entry)
+        if not ok:
+            violations.append(entry)
+    return {"violations": violations, "table": table}
 
 
 def _verdict_table_md(apps_measured: dict) -> str:
@@ -114,10 +143,15 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     # schedule and asserts the fault-tolerance contract (only culpable
     # requests fail, survivors bitwise) while recording recovery ticks.
     serve = bench_serve.main(csv=False)
+    # structural-dedupe axis: repeated-layer / microbatch workloads compiled
+    # with the dedupe pass off vs on -- executable counts, hit-rate, and the
+    # trace+compile+first-run wall-clock reduction, outputs checked bitwise
+    dedupe = bench_e2e.dedupe_smoke(csv=False)
     check = check_lowering_regressions(apps_measured)
+    dedupe_check = check_dedupe_gate(dedupe)
     calibration = bench_e2e.calibration_from_measured(apps_measured)
     results = {
-        "schema": 5,
+        "schema": 6,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -132,6 +166,8 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "serve": serve,
         "hw_calibration": calibration,
         "lowering_check": check,
+        "dedupe": dedupe,
+        "dedupe_check": dedupe_check,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -153,6 +189,12 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
           f"(calibrated eff={calibration['eff']:.2e}, "
           f"launch_s={calibration['launch_s']:.2e})")
     _print_check(check)
+    print("# dedupe gate (one executable per unique program structure):")
+    for e in dedupe_check["table"]:
+        mark = "ok " if e["ok"] else "VIOLATION"
+        print(f"#   {mark} {e['case']}: exes={e['executables_on']} "
+              f"classes={e['n_classes']} programs={e['n_programs']} "
+              f"hit={e['hit_rate']:.2f} bitwise={e['bitwise_equal']}")
     return results
 
 
@@ -174,6 +216,15 @@ def main() -> None:
                 print(f"#   {e['app']}: kitsune={e['kitsune_us']}us > "
                       f"limit={e['limit_us']}us "
                       f"(nolower={e['nolower_us']}us)")
+            sys.exit(1)
+        dedupe_violations = results["dedupe_check"]["violations"]
+        if dedupe_violations:
+            print("# DEDUPE VIOLATIONS (more than one executable per unique "
+                  "program structure, lost sharing, or bitwise drift):")
+            for e in dedupe_violations:
+                print(f"#   {e['case']}: exes={e['executables_on']} "
+                      f"classes={e['n_classes']} programs={e['n_programs']} "
+                      f"bitwise={e['bitwise_equal']}")
             sys.exit(1)
         return
     from . import (bench_coverage, bench_dispatch, bench_e2e, bench_kernels,

@@ -9,11 +9,12 @@ Front door:
 from .api import (CachedFunction, CompiledApp, CompilerOptions, Graph, Node,
                   PassManager, TensorSpec, TracedApp, TracedFunction, atomic,
                   cached_jit, compile, graph_fingerprint, init_params,
-                  lowering_count, trace)
+                  lowering_count, structural_fingerprint, trace)
 
 __all__ = [
     "compile", "CompilerOptions", "CompiledApp", "PassManager",
     "cached_jit", "CachedFunction", "init_params", "lowering_count",
     "Graph", "Node", "TensorSpec", "graph_fingerprint",
+    "structural_fingerprint",
     "trace", "TracedFunction", "TracedApp", "atomic",
 ]

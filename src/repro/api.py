@@ -22,7 +22,8 @@ from .core.compiler import (CachedFunction, CompiledApp, CompilerOptions,
 from .core.executor import (ExecutionReport, GraphExecutor,
                             clear_executable_cache, executable_cache,
                             init_params, lowering_count)
-from .core.graph import Graph, Node, TensorSpec, graph_fingerprint
+from .core.graph import (Graph, Node, TensorSpec, graph_fingerprint,
+                         structural_fingerprint)
 from .core.trace import TracedFunction, atomic, atomic_vjp, trace
 
 __all__ = [
@@ -31,5 +32,6 @@ __all__ = [
     "ExecutionReport", "GraphExecutor", "init_params",
     "executable_cache", "clear_executable_cache", "lowering_count",
     "Graph", "Node", "TensorSpec", "graph_fingerprint",
+    "structural_fingerprint",
     "trace", "TracedFunction", "TracedApp", "atomic", "atomic_vjp",
 ]

@@ -8,17 +8,21 @@ The paper's SS5 flow is exposed as ONE front door (compiler.py):
 with the stages runnable as named passes through PassManager:
 
     select -> split_reduction -> create_queues -> epilogue_fuse ->
-    lower_kernels -> balance
+    lower_kernels -> dedupe -> balance
 
 The historical free functions (select_subgraphs, design_pipeline, balance,
 GraphExecutor) remain exported for direct pass-level use and tests; the
 executor now runs behind per-mode backends (bsp | vertical | kitsune) with a
 process-wide compiled-executable cache.
 """
-from .graph import Graph, Node, TensorSpec, MXU, VPU, graph_fingerprint
+from .graph import (Graph, Node, TensorSpec, MXU, VPU, graph_fingerprint,
+                    node_struct_payload, program_struct_key,
+                    structural_fingerprint, structural_hashes,
+                    subgraph_interface)
 from .patterns import select_subgraphs, Selection, SfNode, PATTERN_LIBRARY
 from .pipeline import (design_pipeline, split_reductions, plan_queues,
                        fuse_epilogues, materialize_queues, OpQueue,
+                       DedupeInfo, dedupe_programs,
                        PipelinedGraph, Pipeline, Stage, QueueSpec)
 from .balance import solve_allocation, balance, BalanceResult
 from .costmodel import (
@@ -47,9 +51,11 @@ from .compiler import (CompilerOptions, CompiledApp, CompileState,
 
 __all__ = [
     "Graph", "Node", "TensorSpec", "MXU", "VPU", "graph_fingerprint",
+    "node_struct_payload", "program_struct_key", "structural_fingerprint",
+    "structural_hashes", "subgraph_interface",
     "select_subgraphs", "Selection", "SfNode", "PATTERN_LIBRARY",
     "design_pipeline", "split_reductions", "plan_queues", "fuse_epilogues",
-    "materialize_queues", "OpQueue",
+    "materialize_queues", "OpQueue", "DedupeInfo", "dedupe_programs",
     "PipelinedGraph", "Pipeline", "Stage", "QueueSpec",
     "solve_allocation", "balance", "BalanceResult",
     "A100", "V5E", "HwSpec", "v5e_mesh", "evaluate", "cost_bsp",

@@ -46,13 +46,14 @@ from .graph import Graph, graph_fingerprint
 from .lower import LoweringPlan, lower_pipelines
 from .patterns import PATTERN_LIBRARY, Selection, select_subgraphs
 from .trace import TracedFunction, trace as trace_fn
-from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, OpQueue,
-                       Pipeline, PipelinedGraph, Stage, fuse_epilogues,
-                       materialize_queues, plan_queues, split_reductions)
+from .pipeline import (DEFAULT_TILE_BYTES, SPLIT_REDUCTION_MIN, DedupeInfo,
+                       OpQueue, Pipeline, PipelinedGraph, Stage,
+                       dedupe_programs, fuse_epilogues, materialize_queues,
+                       plan_queues, split_reductions)
 
 MODES = ("bsp", "vertical", "kitsune")
 PASS_NAMES = ("select", "split_reduction", "create_queues", "epilogue_fuse",
-              "lower_kernels", "balance")
+              "lower_kernels", "dedupe", "balance")
 
 
 @dataclass(frozen=True)
@@ -78,6 +79,13 @@ class CompilerOptions:
                          roofline estimate alone, "auto" (default) settles
                          estimate-uncertain sites with a one-shot compile-time
                          microbenchmark (verdicts cached process-wide)
+    roll_scans           callable path only: keep `lax.scan` loops as ONE
+                         looped node instead of unrolling them -- the graph
+                         (and trace time) stays O(1) in the layer/microbatch
+                         count and the scan body lowers ONCE.  Off by
+                         default: a rolled body is opaque to sf-node
+                         selection and kernel lowering, so this is the
+                         trace-scalability dial, not a general win
     dump_ir              hook called as dump_ir(pass_name, state) after every
                          pass -- the introspection point for IR dumps
     """
@@ -90,6 +98,7 @@ class CompilerOptions:
     hw: HwSpec | None = None
     disable: tuple[str, ...] = ()
     lowering_policy: str = "auto"
+    roll_scans: bool = False
     dump_ir: Callable[[str, "CompileState"], None] | None = None
 
     def __post_init__(self):
@@ -124,7 +133,7 @@ class CompilerOptions:
         observe compilation but cannot change the produced programs)."""
         return (self.mode, self.tile_bytes, self.split_reduction_min,
                 self.patterns, self.min_sf_size, tuple(sorted(self.disabled)),
-                self.lowering_policy)
+                self.lowering_policy, self.roll_scans)
 
 
 @dataclass
@@ -139,6 +148,7 @@ class CompileState:
         field(default_factory=dict)
     pipelined: PipelinedGraph | None = None
     lowering: LoweringPlan | None = None            # lower_kernels artifact
+    dedupe: DedupeInfo | None = None                # dedupe pass artifact
     balance_results: dict[str, BalanceResult] = field(default_factory=dict)
 
 
@@ -176,6 +186,7 @@ def _invalidate_derived(state: CompileState) -> None:
     state.stages_of = {}
     state.pipelined = None
     state.lowering = None
+    state.dedupe = None
 
 
 def _pass_select(state: CompileState, opts: CompilerOptions) -> str:
@@ -267,6 +278,33 @@ def _skip_lower_kernels(state: CompileState, opts: CompilerOptions) -> str:
     return "kernel lowering disabled: every stage runs the jnp path"
 
 
+def _pass_dedupe(state: CompileState, opts: CompilerOptions) -> str:
+    """Bucket the artifact's lowerable programs by structural identity
+    (core/pipeline.py `dedupe_programs`); the Engine caches param-less
+    programs by these keys so structurally equal stages share ONE compiled
+    executable (and one ExecutionPlan binding per stage slot)."""
+    pg = _ensure_pipelined(state, opts)
+    if opts.mode == "vertical":
+        state.dedupe = None
+        return "skipped: vertical mode runs one whole-graph program"
+    if opts.mode == "kitsune":
+        members_of = _pipelined_members(pg)
+        matches_of = {
+            name: (state.lowering.matches_for(name)
+                   if state.lowering is not None else [])
+            for name in members_of}
+        state.dedupe = dedupe_programs(pg.graph, members_of, matches_of)
+    else:  # bsp: one program per non-free op of the source graph
+        state.dedupe = dedupe_programs(state.graph, {})
+    return state.dedupe.summary()
+
+
+def _skip_dedupe(state: CompileState, opts: CompilerOptions) -> str:
+    _ensure_pipelined(state, opts)
+    state.dedupe = None
+    return "dedupe disabled: every program keyed by name"
+
+
 def _pass_balance(state: CompileState, opts: CompilerOptions) -> str:
     pg = _ensure_pipelined(state, opts)
     hw = opts.resolved_hw()
@@ -318,6 +356,7 @@ _PASSES: dict[str, tuple[Callable, Callable]] = {
     "create_queues": (_pass_create_queues, _skip_create_queues),
     "epilogue_fuse": (_pass_epilogue_fuse, _skip_epilogue_fuse),
     "lower_kernels": (_pass_lower_kernels, _skip_lower_kernels),
+    "dedupe": (_pass_dedupe, _skip_dedupe),
     "balance": (_pass_balance, _skip_balance),
 }
 
@@ -372,6 +411,7 @@ class CompiledApp:
         self.selection = state.selection
         self.pipelined = state.pipelined
         self.lowering = state.lowering
+        self.dedupe = state.dedupe
         self.balance_results = state.balance_results
         self.fingerprint = graph_fingerprint(graph)
         if options.mode == "kitsune":
@@ -390,9 +430,12 @@ class CompiledApp:
             lowering = None
         backend = make_backend(options.mode, exec_graph, sf_members,
                                lowering)
+        struct_keys = (state.dedupe.struct_keys
+                       if state.dedupe is not None else None)
         self._engine = Engine(backend,
                               (self.fingerprint, options.cache_key()),
-                              donate_feeds=self.donate_feeds)
+                              donate_feeds=self.donate_feeds,
+                              struct_keys=struct_keys)
 
     # -- execution --------------------------------------------------------
     def run(self, feeds: dict[str, jax.Array], params: dict | None = None,
@@ -405,10 +448,22 @@ class CompiledApp:
         return init_params(self.graph, key, scale, **kw)
 
     def executables(self) -> list[tuple]:
-        """Cache keys of this app's compiled programs (debug/introspection)."""
+        """Cache keys of this app's compiled programs (debug/introspection).
+
+        Covers both the engine-namespaced entries and, when the dedupe pass
+        ran, the canonical `("sfprog", struct_key, ...)` entries this app's
+        programs bind to (those are shared: another app with structurally
+        equal programs lists the same keys)."""
         prefix = self._engine.engine_key
+        skeys = set(self._engine.struct_keys.values())
         return [k for k in executable_cache().keys()
-                if k[:len(prefix)] == prefix]
+                if k[:len(prefix)] == prefix
+                or (k and k[0] == "sfprog" and k[1] in skeys)]
+
+    def dedupe_stats(self) -> dict:
+        """Structural-dedupe telemetry (programs, classes, hit rate) for
+        this artifact's engine; all-zero hit rate when the pass is off."""
+        return self._engine.dedupe_stats()
 
     # -- analytics --------------------------------------------------------
     def estimate(self, hw: HwSpec | None = None, mode: str | None = None,
@@ -574,7 +629,8 @@ def compile(graph: Graph | Callable, *args,
         if not isinstance(example_inputs, (tuple, list)):
             example_inputs = (example_inputs,)
         t0 = time.perf_counter()
-        traced = trace_fn(graph, *tuple(example_inputs))
+        traced = trace_fn(graph, *tuple(example_inputs),
+                          roll_scans=options.roll_scans)
         rec = PassRecord("trace", time.perf_counter() - t0, False,
                          f"{len(traced.graph.nodes)} nodes, "
                          f"{len(traced.consts)} consts")

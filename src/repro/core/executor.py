@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph, Node, graph_fingerprint
+from .graph import Graph, Node, graph_fingerprint, subgraph_interface
 from .patterns import Selection, select_subgraphs
 
 _EW_FNS: dict[str, Callable] = {
@@ -396,9 +396,6 @@ def _sf_program(g: Graph, name: str, members: list[str],
     interpretation loop and their internal intermediates never materialize.
     Without matches the program replays every member's jnp closure (the
     pre-lowering vertical-fusion-per-sf-node behavior)."""
-    mset = set(members)
-    need = tuple(dict.fromkeys(
-        i for m in members for i in g.nodes[m].inputs if i not in mset))
     pkeys = tuple(members)
     match_of: dict[str, Any] = {}
     for km in (matches or ()):
@@ -416,18 +413,13 @@ def _sf_program(g: Graph, name: str, members: list[str],
                 emitted.add(id(km))
             continue
         schedule.append((False, g.nodes[m]))
-    # exports: values consumed outside the sf-node (queue payloads stay
-    # on-chip) -- match internals are single-consumer-internal by matcher
-    # contract, so they are never exports
+    # needs/exports come from the SHARED interface helper (core/graph.py):
+    # exports are values consumed outside the sf-node (queue payloads stay
+    # on-chip); match internals are single-consumer-internal by matcher
+    # contract, so they are never exports.  program_struct_key hashes this
+    # same derivation, so struct-equal programs share a calling convention.
     internal = {o for km in (matches or ()) for o in km.ops if o != km.out}
-    exports = []
-    for m in members:
-        if m in internal:
-            continue
-        cons = g.consumers(m)
-        if not cons or any(c.name not in mset for c in cons):
-            exports.append(m)
-    exports = tuple(exports)
+    need, exports = subgraph_interface(g, members, internal)
 
     def fn(feed: dict[str, jax.Array], params: dict) -> dict:
         vals = dict(feed)
@@ -750,11 +742,18 @@ class Engine:
 
     def __init__(self, backend: ExecutorBackend, engine_key: tuple,
                  cache: ExecutableCache | None = None,
-                 donate_feeds: frozenset[str] | set[str] = frozenset()):
+                 donate_feeds: frozenset[str] | set[str] = frozenset(),
+                 struct_keys: dict[str, str] | None = None):
         self.backend = backend
         self.graph = backend.graph
         self.programs = backend.plan()
         self.donate_feeds = frozenset(donate_feeds)
+        # program name -> canonical structural key (core/graph.py
+        # program_struct_key), provided by the dedupe pass.  Param-less
+        # programs carrying a struct key are cached under it INSTEAD of the
+        # engine-namespaced name key, so N structurally equal stages (and
+        # identical stages of other engines) bind to ONE executable.
+        self.struct_keys = dict(struct_keys or {})
         self.engine_key = (engine_key,) + backend.key()
         if self.donate_feeds:
             # donating engines must never share executables with
@@ -905,9 +904,20 @@ class Engine:
                             donated_ids.add(i)
                         keep.append(p)
                     donate = tuple(keep)
-                ckey = self.engine_key + (
-                    "plan", prog.name, donate,
-                    _plan_key(ins), _plan_key(psub))
+                skey = self.struct_keys.get(prog.name) if not pkeys else None
+                if skey is not None:
+                    # canonical struct-keyed entry: NO engine namespace, so
+                    # structurally equal programs share ONE executable across
+                    # stages, apps, and engines.  Only safe for param-less
+                    # programs (positional calling convention; name-keyed
+                    # param dicts would split on pytree structure) -- traced
+                    # apps always qualify.  Runtime shape/donation variation
+                    # is still keyed (it changes the compiled artifact).
+                    ckey = ("sfprog", skey, donate, _plan_key(ins))
+                else:
+                    ckey = self.engine_key + (
+                        "plan", prog.name, donate,
+                        _plan_key(ins), _plan_key(psub))
                 before = self.cache.misses
                 exe = self.cache.get_or_build(
                     ckey, lambda: self._build_positional(
@@ -984,6 +994,32 @@ class Engine:
         return _Executable(compiled, b, t, donation=info,
                            aliased_bytes=aliased,
                            donation_declined=declined)
+
+    def dedupe_stats(self) -> dict:
+        """Structural-dedupe telemetry for this engine's program list.
+
+        `n_classes` counts distinct (structural key, donation positions)
+        pairs over the keyed programs: the number of executables a first run
+        compiles for them (free programs never compile and unkeyed programs
+        fall back to name-keyed entries).  Donation is part of the
+        executable's ABI -- a class whose first copy consumes a live user
+        feed while later copies consume dead intermediates splits into a
+        non-donating and a donating variant (bounded: the handful of donate
+        patterns, not the layer count), rather than silently downgrading the
+        donating copies' in-place updates.  `hit_rate` is the fraction of
+        keyed program instances served by another instance's executable --
+        0.0 when every program is structurally unique, approaching 1.0 for
+        deeply repeated layers."""
+        progs = [p for p in self.programs if p.fn is not None]
+        keyed = [self.struct_keys[p.name] for p in progs
+                 if p.name in self.struct_keys]
+        classes = {(self.struct_keys[st.prog.name], st.donate)
+                   for st in self._steps if type(st) is _StepSpec
+                   and st.prog.name in self.struct_keys}
+        n_classes = len(classes) if classes else len(set(keyed))
+        return {"n_programs": len(progs), "n_keyed": len(keyed),
+                "n_classes": n_classes,
+                "hit_rate": (1.0 - n_classes / len(keyed)) if keyed else 0.0}
 
     def donation_report(self) -> dict:
         """Donation telemetry across this engine's live ExecutionPlans:

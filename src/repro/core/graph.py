@@ -285,7 +285,12 @@ def graph_fingerprint(g: Graph) -> str:
     starting with "_" are implementation carriers (e.g. the traced-node eval
     closures from core/trace.py, whose repr embeds object addresses) and are
     excluded; traced nodes instead expose their semantics through the stable
-    public `prim`/`params` attrs."""
+    public `prim`/`params` attrs.
+
+    This fingerprint is deliberately name- and order-SENSITIVE (it identifies
+    one exact graph object across processes).  The CANONICAL identity used by
+    the dedupe pass -- invariant to node naming and insertion-order jitter --
+    is `structural_fingerprint` / `program_struct_key` below."""
     h = hashlib.sha256()
     for n in g.topo():
         attrs = sorted((k, v) for k, v in n.attrs.items()
@@ -293,3 +298,133 @@ def graph_fingerprint(g: Graph) -> str:
         h.update(repr((n.name, n.kind, tuple(n.inputs), n.out.shape,
                        n.out.dtype, n.flops, n.weight_bytes, attrs)).encode())
     return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Canonical structural identity (graph-level CSE / plan dedupe)
+# ---------------------------------------------------------------------------
+
+def _sha(payload: str) -> str:
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def node_struct_payload(n: Node) -> tuple:
+    """Name-free structural payload of one node.
+
+    Everything that determines the node's computation EXCEPT its wiring:
+    kind, output shape/dtype, cost tags, and every public attr -- which for
+    traced nodes includes `prim`/`params` (the exact primitive + static
+    params), `lits` (baked literal operands, so `x + 1.0` never equals
+    `x + 2.0`), and `lower_hint` (kernel-lowering configs).  Attr keys
+    starting with "_" carry eval closures whose reprs embed object addresses
+    and are excluded -- the property suite in tests/test_cse.py pins that
+    re-traces hash identically."""
+    attrs = tuple(sorted((k, repr(v)) for k, v in n.attrs.items()
+                         if not k.startswith("_")))
+    return (n.kind, n.out.shape, n.out.dtype, n.flops, n.weight_bytes, attrs)
+
+
+def structural_hashes(g: Graph) -> dict[str, str]:
+    """Per-node canonical hash: payload + recursively-hashed inputs.
+
+    Because a node's hash depends only on WHAT it computes (payload) and the
+    hashes of its producers -- never on node names or on where unrelated
+    nodes sit in the insertion order -- two graphs that differ only by
+    renaming or by a topology-preserving permutation of internal nodes get
+    identical hash multisets.  Leaves (inputs/consts) are identified by
+    their ordinal within their kind plus shape/dtype: the calling
+    convention, not the name.  Const VALUES are runtime feeds (the executor
+    feeds them like inputs), so they do not enter the hash -- baked literals
+    do, via the `lits` attr in the payload."""
+    hashes: dict[str, str] = {}
+    counts = {"input": 0, "const": 0}
+    for n in g.topo():
+        if n.kind in ("input", "const"):
+            i = counts[n.kind]
+            counts[n.kind] = i + 1
+            hashes[n.name] = _sha(repr(
+                ("leaf", n.kind, i, n.out.shape, n.out.dtype)))
+        else:
+            hashes[n.name] = _sha(repr(
+                (node_struct_payload(n), tuple(hashes[i] for i in n.inputs))))
+    return hashes
+
+
+def structural_fingerprint(g: Graph) -> str:
+    """Whole-graph canonical fingerprint.
+
+    Invariant to node naming and to insertion-order jitter among internal
+    nodes (leaf order IS the calling convention and stays significant);
+    sensitive to shapes, dtypes, baked consts, and lowering hints.  Hashes
+    the sorted multiset of node hashes plus the ordered output hashes."""
+    hashes = structural_hashes(g)
+    outs = tuple(hashes[n.name] for n in g.topo() if n.kind == "output")
+    return _sha(repr((sorted(hashes.values()), outs)))[:16]
+
+
+def subgraph_interface(g: Graph, members: list[str],
+                       match_internal: frozenset | set = frozenset(),
+                       ) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """(needs, exports) of the program executing `members` in order.
+
+    `needs` is the ordered unique list of external values the program
+    consumes; `exports` the members whose values are consumed outside the
+    subgraph (or nowhere -- graph outputs).  `match_internal` names member
+    values strictly internal to a kernel match (never exported by matcher
+    contract).  This is the single source of truth for the executable
+    calling convention: `_sf_program` (core/executor.py) builds the program
+    from it and `program_struct_key` hashes it, so two programs with equal
+    struct keys take/return the same slots in the same order."""
+    mset = set(members)
+    need = tuple(dict.fromkeys(
+        i for m in members for i in g.nodes[m].inputs if i not in mset))
+    exports = []
+    for m in members:
+        if m in match_internal:
+            continue
+        cons = g.consumers(m)
+        if not cons or any(c.name not in mset for c in cons):
+            exports.append(m)
+    return need, tuple(exports)
+
+
+def program_struct_key(g: Graph, members: list[str], matches=()) -> str:
+    """Canonical identity of ONE lowerable program (sf-node or single op).
+
+    Two programs with equal keys compute the same function of their
+    positional inputs and return the same outputs in the same order, so the
+    executor may bind them to ONE compiled executable (core/executor.py
+    keys the cache with this when the dedupe pass runs).  Ingredients:
+
+      * per-member `node_struct_payload` in schedule order,
+      * wiring encoded positionally -- internal edges as member indices,
+        external inputs as (slot in `needs`, shape, dtype),
+      * export positions (which members leave the program, in which order),
+      * kernel-match signatures (kernel name, meta incl. autotuned blocks,
+        member positions covered, executability + verdict) -- differently
+        lowered programs never share executables.
+
+    Node names never enter the key; neither do const VALUES (runtime feeds)."""
+    internal = {o for km in matches for o in km.ops if o != km.out}
+    need, exports = subgraph_interface(g, members, internal)
+    ext_pos = {nm: i for i, nm in enumerate(need)}
+    mem_pos = {nm: i for i, nm in enumerate(members)}
+
+    def ref(nm: str):
+        if nm in mem_pos:
+            return ("m", mem_pos[nm])
+        spec = g.nodes[nm].out
+        return ("x", ext_pos[nm], spec.shape, spec.dtype)
+
+    body = tuple((node_struct_payload(g.nodes[m]),
+                  tuple(ref(i) for i in g.nodes[m].inputs))
+                 for m in members)
+    match_sig = tuple(sorted(
+        (km.kernel,
+         tuple(sorted((k, repr(v)) for k, v in km.meta.items())),
+         tuple(mem_pos[o] for o in km.ops), mem_pos[km.out],
+         bool(getattr(km, "executable", True)),
+         bool(getattr(km, "accepted", True)))
+        for km in matches))
+    out_sig = tuple(mem_pos[e] for e in exports)
+    return _sha(repr((body, match_sig, out_sig)))[:16]

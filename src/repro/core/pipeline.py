@@ -24,7 +24,7 @@ import dataclasses
 import math
 from dataclasses import dataclass, field
 
-from .graph import MXU, VPU, Graph, Node, TensorSpec
+from .graph import (MXU, VPU, Graph, Node, TensorSpec, program_struct_key)
 from .patterns import Selection, SfNode
 
 # Default on-chip queue payload: a (128 x 256) bf16 tile = 64 KiB -- the
@@ -242,6 +242,71 @@ def materialize_queues(sf_name: str, stages: list[Stage],
         ))
         edges[src.name] = sorted(set(edges[src.name]) | dsts)
     return queues, edges
+
+
+# ---------------------------------------------------------------------------
+# Structural program dedupe (graph-level CSE over lowerable programs)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DedupeInfo:
+    """Artifact of the `dedupe` pass: canonical structural keys over every
+    lowerable program of the artifact (sf-node pipelines AND standalone ops).
+
+    `struct_keys` maps program name -> `program_struct_key` (core/graph.py);
+    the executor caches param-less programs under these keys, so a first
+    run compiles one executable per `classes` bucket (per donation variant
+    within it -- see Engine.dedupe_stats): N structurally equal unrolled
+    layers cost ONE lowering, not N."""
+    struct_keys: dict[str, str]
+    classes: dict[str, list[str]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.classes:
+            for name, k in self.struct_keys.items():
+                self.classes.setdefault(k, []).append(name)
+
+    @property
+    def n_programs(self) -> int:
+        return len(self.struct_keys)
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+    def hit_rate(self) -> float:
+        """Fraction of programs served by another program's executable."""
+        n = self.n_programs
+        return (1.0 - self.n_classes / n) if n else 0.0
+
+    def summary(self) -> str:
+        dup = max((len(v) for v in self.classes.values()), default=0)
+        return (f"{self.n_programs} programs -> {self.n_classes} classes "
+                f"(hit rate {self.hit_rate():.2f}, largest class {dup})")
+
+
+def dedupe_programs(g: Graph, members_of: dict[str, list[str]],
+                    matches_of: dict[str, list] | None = None) -> DedupeInfo:
+    """Pass `dedupe`: bucket the artifact's programs by structural identity.
+
+    `members_of` gives the executable member list per sf-node program (empty
+    for per-op backends); every non-free node outside an sf-node is its own
+    single-op program.  `matches_of` carries the kernel matches the
+    `lower_kernels` pass bound per sf-node -- match signatures enter the key
+    so differently-lowered programs never share executables.  Free nodes
+    (reshape/index/stack/output) never compile and are skipped."""
+    matches_of = matches_of or {}
+    struct_keys: dict[str, str] = {}
+    covered: set[str] = set()
+    for name, members in members_of.items():
+        struct_keys[name] = program_struct_key(
+            g, members, tuple(matches_of.get(name) or ()))
+        covered.update(members)
+    for n in g.topo():
+        if n.name in covered or n.is_free:
+            continue
+        struct_keys[n.name] = program_struct_key(g, [n.name])
+    return DedupeInfo(struct_keys)
 
 
 def design_pipeline(selection: Selection,

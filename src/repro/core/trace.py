@@ -356,10 +356,12 @@ class TracedFunction:
 
 
 class _Importer:
-    def __init__(self, name: str, max_unroll_eqns: int):
+    def __init__(self, name: str, max_unroll_eqns: int,
+                 roll_scans: bool = False):
         self.g = Graph(name)
         self.consts: dict[str, jax.Array] = {}
         self.max_unroll_eqns = max_unroll_eqns
+        self.roll_scans = roll_scans
         self._by_id: dict[int, str] = {}
         self._by_val: dict[tuple, str] = {}
         # arrays registered in _by_id must stay alive: a freed temporary's
@@ -570,8 +572,8 @@ class _Importer:
         self._emit(eqn, env, kind=spec.kind,
                    flops=float(est(in_avals, out_avals)), attrs=attrs)
 
-    def _opaque(self, eqn, env) -> None:
-        """Control-flow (or oversized scan) kept as one exact node."""
+    def _opaque(self, eqn, env, extra: dict | None = None) -> None:
+        """Control-flow (or oversized/rolled scan) kept as one exact node."""
         bodies = _sub_jaxprs(eqn.params)
         flops = sum(jaxpr_flops(b) for b in bodies)
         if eqn.primitive.name == "scan":
@@ -580,13 +582,23 @@ class _Importer:
         if any(e.primitive.name == "dot_general" for b in bodies
                for e in b.eqns):
             kind = "matmul"
-        self._emit(eqn, env, kind=kind, flops=flops)
+        self._emit(eqn, env, kind=kind, flops=flops, attrs=extra)
 
     # -- scan unrolling ----------------------------------------------------
     def _scan(self, eqn, env) -> None:
         p = eqn.params
         body: jex_core.ClosedJaxpr = p["jaxpr"]
         length = int(p["length"])
+        if self.roll_scans and length > 1:
+            # A `lax.scan` is body-invariant BY CONSTRUCTION (one jaxpr, one
+            # carry/slice signature for every trip) -- models whose layers
+            # differ structurally can only be written as Python loops, which
+            # arrive pre-unrolled.  Keep it rolled: ONE looped node binding
+            # the scan primitive exactly, lowered once, so trace time and
+            # graph size stay O(1) in the layer/microbatch count.
+            self._opaque(eqn, env,
+                         extra={"rolled_scan": True, "length": length})
+            return
         if (length < 1
                 or length * max(len(body.jaxpr.eqns), 1) > self.max_unroll_eqns):
             self._opaque(eqn, env)
@@ -632,16 +644,20 @@ class _Importer:
 
 
 def trace(fn: Callable, *example_args, name: str | None = None,
-          max_unroll_eqns: int = MAX_UNROLL_EQNS) -> TracedFunction:
+          max_unroll_eqns: int = MAX_UNROLL_EQNS,
+          roll_scans: bool = False) -> TracedFunction:
     """Import `fn` (traced on `example_args`) into a Graph.
 
     The example args may be any pytrees of arrays; subsequent executions of
     the traced artifact must pass the same structure (same shapes => cached
-    executables, zero new lowerings)."""
+    executables, zero new lowerings).  `roll_scans` keeps every multi-trip
+    `lax.scan` as ONE looped node (tagged `attrs["rolled_scan"]`) instead of
+    unrolling -- numerically exact, lowered once, O(1) trace in the trip
+    count, at the price of hiding the body from sf-node selection."""
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     flat, in_tree = jax.tree_util.tree_flatten(example_args)
     imp = _Importer(name or getattr(fn, "__name__", "traced") or "traced",
-                    max_unroll_eqns)
+                    max_unroll_eqns, roll_scans)
     in_names = []
     for i, (var, val) in enumerate(zip(closed.jaxpr.invars, flat)):
         nm = f"arg{i}"

@@ -175,6 +175,14 @@ def compile_train_step(cfg: ArchConfig, opt: Optimizer,
     update in place, so feed each call the previous call's output state, not
     a retained copy.
 
+    With `tc.microbatches > 1` the accumulation loop unrolls into
+    structurally identical per-microbatch subgraphs; the compiler's
+    `dedupe` pass keys them by structural identity so they share ONE
+    compiled executable per unique structure (pass `disable=("dedupe",)`
+    to opt out, or `roll_scans=True` to keep the loop as a single rolled
+    node -- O(1) trace in the microbatch count, at the cost of hiding the
+    body from sf-node selection).
+
     The serving analogue is `ServeConfig(compile_mode=...)`; this is the
     training side of the same switch."""
     import repro

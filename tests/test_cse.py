@@ -1,0 +1,427 @@
+"""Graph-level CSE / structural plan dedupe: program identity as a property.
+
+Contract under test (the `dedupe` pass + canonical structural identity):
+  * `structural_fingerprint` is INVARIANT to node renaming and to
+    topology-preserving insertion-order permutations of internal nodes, and
+    guaranteed to MISS when shapes, dtypes, baked literals, or kernel
+    lowering hints differ (property suite, hypothesis-driven),
+  * re-tracing the same callable yields the same fingerprint -- the traced
+    `attrs["_eval"]` closures (whose reprs embed object addresses) never
+    leak into the identity,
+  * with the dedupe pass ON, every compiled app is BITWISE identical to the
+    same app compiled with dedupe OFF -- all five challenge apps, deep zoo
+    configs, forward AND backward (`compile_train_step`, microbatches > 1),
+  * for repeated-structure graphs the executable cache holds ONE entry per
+    structural class, not one per program (first-run cache misses ==
+    `dedupe.n_classes`),
+  * `roll_scans=True` keeps a body-invariant `lax.scan` as ONE looped node
+    that matches the unrolled graph bitwise and lowers once; body-variant
+    Python loops still unroll.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro import CompilerOptions
+from repro.configs import get_config
+from repro.core.executor import (clear_executable_cache, executable_cache,
+                                 init_params, lowering_count)
+from repro.core.graph import (Graph, graph_fingerprint, program_struct_key,
+                              structural_fingerprint, structural_hashes,
+                              subgraph_interface)
+from repro.models import zoo
+from repro.optim import adamw
+from repro.train import TrainConfig, compile_train_step, make_train_state
+
+
+# --------------------------------------------------------------------------
+# deterministic graph builders (parameterized by hypothesis draws)
+# --------------------------------------------------------------------------
+
+def _mlp_graph(name="g", d=16, hidden=32, layers=2, dtype="float32",
+               act="gelu", prefix="n"):
+    """A stack of `layers` identical linear->elementwise->linear blocks."""
+    g = Graph(name)
+    g.input(f"{prefix}_x", (4, d), dtype)
+    cur = f"{prefix}_x"
+    for i in range(layers):
+        g.linear(f"{prefix}_up{i}", cur, hidden, dtype=dtype)
+        g.elementwise(f"{prefix}_act{i}", [f"{prefix}_up{i}"], fn=act)
+        g.linear(f"{prefix}_down{i}", f"{prefix}_act{i}", d, dtype=dtype)
+        cur = f"{prefix}_down{i}"
+    g.output(f"{prefix}_out", cur)
+    return g
+
+
+def _diamond_graph(name="g", d=8, dtype="float32", swap=False, prefix="n"):
+    """x -> (a, b) -> add: the two middle nodes are order-independent, so
+    inserting them as (a, b) or (b, a) is a topology-preserving permutation."""
+    g = Graph(name)
+    g.input(f"{prefix}_x", (4, d), dtype)
+    order = ["b", "a"] if swap else ["a", "b"]
+    for tag in order:
+        fn = "relu" if tag == "a" else "tanh"
+        g.elementwise(f"{prefix}_{tag}", [f"{prefix}_x"], fn=fn)
+    g.elementwise(f"{prefix}_add", [f"{prefix}_a", f"{prefix}_b"], fn="add")
+    g.output(f"{prefix}_out", f"{prefix}_add")
+    return g
+
+
+# --------------------------------------------------------------------------
+# property suite: invariances and guaranteed misses
+# --------------------------------------------------------------------------
+
+class TestStructuralFingerprint:
+    @given(layers=st.integers(min_value=1, max_value=4),
+           hidden=st.sampled_from([16, 32, 48]),
+           prefix=st.sampled_from(["n", "m", "zz"]))
+    @settings(max_examples=20, deadline=None)
+    def test_invariant_under_renaming(self, layers, hidden, prefix):
+        a = _mlp_graph(layers=layers, hidden=hidden, prefix="n")
+        b = _mlp_graph(layers=layers, hidden=hidden, prefix=prefix)
+        assert structural_fingerprint(a) == structural_fingerprint(b)
+        if prefix != "n":
+            # the legacy fingerprint is name-sensitive by design
+            assert graph_fingerprint(a) != graph_fingerprint(b)
+
+    @given(d=st.sampled_from([8, 16, 32]))
+    @settings(max_examples=10, deadline=None)
+    def test_invariant_under_insertion_order(self, d):
+        a = _diamond_graph(d=d, swap=False)
+        b = _diamond_graph(d=d, swap=True)
+        assert structural_fingerprint(a) == structural_fingerprint(b)
+        assert graph_fingerprint(a) != graph_fingerprint(b)
+
+    @given(layers=st.integers(min_value=1, max_value=3))
+    @settings(max_examples=10, deadline=None)
+    def test_miss_on_shape(self, layers):
+        a = _mlp_graph(layers=layers, d=16)
+        b = _mlp_graph(layers=layers, d=32)
+        assert structural_fingerprint(a) != structural_fingerprint(b)
+
+    @given(layers=st.integers(min_value=1, max_value=3))
+    @settings(max_examples=10, deadline=None)
+    def test_miss_on_dtype(self, layers):
+        a = _mlp_graph(layers=layers, dtype="float32")
+        b = _mlp_graph(layers=layers, dtype="bfloat16")
+        assert structural_fingerprint(a) != structural_fingerprint(b)
+
+    @given(act=st.sampled_from(["relu", "tanh", "silu"]))
+    @settings(max_examples=10, deadline=None)
+    def test_miss_on_attrs(self, act):
+        a = _mlp_graph(act="gelu")
+        b = _mlp_graph(act=act)
+        assert structural_fingerprint(a) != structural_fingerprint(b)
+
+    def test_miss_on_baked_literal(self):
+        """x + 1.0 vs x + 2.0: baked literals enter via the `lits` attr."""
+        x = jnp.ones((4, 8), jnp.float32)
+        t1 = repro.trace(lambda x: x + 1.0, x)
+        t2 = repro.trace(lambda x: x + 2.0, x)
+        assert structural_fingerprint(t1.graph) != structural_fingerprint(t2.graph)
+
+    def test_miss_on_lowering_hint(self):
+        g1 = _mlp_graph(layers=1)
+        g2 = _mlp_graph(layers=1)
+        g2.nodes["n_up0"].attrs["lower_hint"] = "fused_mlp"
+        assert structural_fingerprint(g1) != structural_fingerprint(g2)
+
+    def test_miss_on_extra_layer(self):
+        assert (structural_fingerprint(_mlp_graph(layers=2))
+                != structural_fingerprint(_mlp_graph(layers=3)))
+
+    def test_leaf_order_is_calling_convention(self):
+        """Swapping which INPUT feeds which op changes the identity: leaf
+        ordinals encode the positional calling convention."""
+        def build(flip):
+            g = Graph("g")
+            g.input("x", (4, 8), "float32")
+            g.input("y", (4, 8), "float32")
+            a, b = ("y", "x") if flip else ("x", "y")
+            g.elementwise("r", [a], fn="relu")
+            g.elementwise("s", [b], fn="tanh")
+            g.elementwise("o", ["r", "s"], fn="add")
+            g.output("out", "o")
+            return g
+        assert (structural_fingerprint(build(False))
+                != structural_fingerprint(build(True)))
+
+    def test_private_attrs_excluded(self):
+        g1 = _mlp_graph(layers=1)
+        g2 = _mlp_graph(layers=1)
+        g2.nodes["n_up0"].attrs["_eval"] = object()  # address-bearing repr
+        assert structural_fingerprint(g1) == structural_fingerprint(g2)
+        assert structural_hashes(g1) == structural_hashes(g2)
+
+
+class TestRetraceStability:
+    def test_retrace_same_fingerprint(self):
+        """attrs['_eval'] closures differ per trace (fresh objects, fresh
+        addresses); the structural identity must not see them."""
+        x = jnp.ones((4, 8), jnp.float32)
+        fn = lambda x: jnp.tanh(x @ jnp.ones((8, 8), jnp.float32)) * 2.0
+        t1, t2 = repro.trace(fn, x), repro.trace(fn, x)
+        assert structural_fingerprint(t1.graph) == structural_fingerprint(t2.graph)
+
+    @pytest.mark.parametrize("name", ["gemma3-1b", "qwen1.5-32b"])
+    def test_retrace_zoo_same_fingerprint(self, name):
+        zf1 = zoo.build(name, batch=1, seq=8)
+        zf2 = zoo.build(name, batch=1, seq=8)
+        f1 = structural_fingerprint(repro.trace(zf1.fn, *zf1.example_inputs).graph)
+        f2 = structural_fingerprint(repro.trace(zf2.fn, *zf2.example_inputs).graph)
+        assert f1 == f2
+
+    def test_no_address_leak_in_payload(self):
+        """No struct key may embed an object address (0x... repr)."""
+        zf = zoo.build("gemma3-1b", batch=1, seq=8)
+        tf = repro.trace(zf.fn, *zf.example_inputs)
+        from repro.core.graph import node_struct_payload
+        for n in tf.graph.topo():
+            assert " at 0x" not in repr(node_struct_payload(n)), n.name
+
+
+class TestProgramStructKey:
+    def test_repeated_layers_share_key(self):
+        g = _mlp_graph(layers=3)
+        k0 = program_struct_key(g, ["n_up0", "n_act0", "n_down0"])
+        k1 = program_struct_key(g, ["n_up1", "n_act1", "n_down1"])
+        k2 = program_struct_key(g, ["n_up2", "n_act2", "n_down2"])
+        assert k0 == k1 == k2
+
+    def test_interface_matches_executor_convention(self):
+        g = _mlp_graph(layers=2)
+        need, exports = subgraph_interface(g, ["n_up1", "n_act1", "n_down1"])
+        assert need == ("n_down0",)
+        assert exports == ("n_down1",)
+
+    def test_export_split_changes_key(self):
+        """Same body, different exports (an internal value consumed outside
+        the program) -> different key."""
+        g1 = _mlp_graph(layers=2)
+        g2 = _mlp_graph(layers=2)
+        # in g2 the mid value act0 is ALSO consumed outside the program
+        g2.elementwise("spy", ["n_act0"], fn="relu")
+        members = ["n_up0", "n_act0", "n_down0"]
+        assert (program_struct_key(g1, members)
+                != program_struct_key(g2, members))
+
+
+# --------------------------------------------------------------------------
+# dedupe pass: differential on/off, all five apps + zoo, fwd and bwd
+# --------------------------------------------------------------------------
+
+def _bitwise_equal(tree_a, tree_b, label=""):
+    la = jax.tree_util.tree_leaves(tree_a)
+    lb = jax.tree_util.tree_leaves(tree_b)
+    assert len(la) == len(lb), label
+    for a, b in zip(la, lb):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), label
+
+
+def _app_cases():
+    import sys, pathlib
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.apps import tiny_instances
+    return tiny_instances()
+
+
+class TestDedupeDifferential:
+    @pytest.mark.parametrize("mode", ["bsp", "kitsune"])
+    def test_five_apps_bitwise(self, mode):
+        for name, (g, feeds) in _app_cases().items():
+            params = init_params(g, jax.random.PRNGKey(0))
+            on = repro.compile(g, CompilerOptions(mode=mode))
+            off = repro.compile(g, CompilerOptions(mode=mode,
+                                                   disable=("dedupe",)))
+            assert on.dedupe is not None and off.dedupe is None
+            ro = on.run(feeds, params)
+            rf = off.run(feeds, params)
+            assert set(ro.outputs) == set(rf.outputs), name
+            for k in ro.outputs:
+                _bitwise_equal(ro.outputs[k], rf.outputs[k], f"{mode}:{name}:{k}")
+
+    @pytest.mark.parametrize("name", ["gemma3-1b", "grok-1-314b"])
+    def test_zoo_forward_bitwise(self, name):
+        zf = zoo.build(name, batch=1, seq=8)
+        on = repro.compile(zf.fn, zf.example_inputs,
+                           CompilerOptions(mode="kitsune"))
+        off = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", disable=("dedupe",)))
+        ro = on.run(on.traced.feeds(*zf.example_inputs))
+        rf = off.run(off.traced.feeds(*zf.example_inputs))
+        for k in ro.outputs:
+            _bitwise_equal(ro.outputs[k], rf.outputs[k], f"{name}:{k}")
+
+    def test_deep_zoo_one_executable_per_class(self):
+        """The acceptance gate: a repeated-layer MoE graph at 2x layers
+        compiles exactly one executable per unique program structure."""
+        cfg = get_config("grok-1-314b").reduced()
+        deep = dataclasses.replace(cfg, n_layers=2 * cfg.n_layers)
+        zf = zoo.build(deep, batch=1, seq=8, reduced=False)
+
+        clear_executable_cache()
+        off = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", disable=("dedupe",)))
+        r_off = off.run(off.traced.feeds(*zf.example_inputs))
+        misses_off = r_off.cache_misses
+
+        clear_executable_cache()
+        on = repro.compile(zf.fn, zf.example_inputs,
+                           CompilerOptions(mode="kitsune"))
+        r_on = on.run(on.traced.feeds(*zf.example_inputs))
+        stats = on.dedupe_stats()
+
+        # structurally repeated layers -> strictly fewer compiles
+        assert stats["n_classes"] < stats["n_programs"]
+        assert r_on.cache_misses == stats["n_classes"]
+        assert misses_off == stats["n_programs"]
+        # and the shared executables change nothing
+        for k in r_on.outputs:
+            _bitwise_equal(r_on.outputs[k], r_off.outputs[k], k)
+        # steady state: no further lowering
+        assert on.run(on.traced.feeds(*zf.example_inputs)).cache_misses == 0
+
+    def test_train_step_microbatches_bitwise(self):
+        """Backward direction: microbatch accumulation unrolls to repeated
+        per-microbatch subgraphs; dedupe must share them bitwise-safely."""
+        cfg = get_config("qwen1.5-32b").reduced()
+        opt = adamw(1e-3)
+        tc = TrainConfig(remat=False, xent_chunk=8, microbatches=4)
+        state0 = make_train_state(cfg, opt, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (4, 12), 0, cfg.vocab)}
+
+        def run(disable):
+            clear_executable_cache()
+            s = jax.tree.map(lambda x: jnp.array(x, copy=True), state0)
+            app = compile_train_step(cfg, opt, tc, state=s, batch=batch,
+                                     donate_state=False, disable=disable)
+            out_state, metrics = app(s, batch)
+            return app, out_state, metrics
+
+        app_off, st_off, m_off = run(("dedupe",))
+        app_on, st_on, m_on = run(())
+        stats = app_on.dedupe_stats()
+        assert stats["n_classes"] < stats["n_programs"]  # microbatch sharing
+        _bitwise_equal(st_off, st_on, "state")
+        _bitwise_equal(m_off, m_on, "metrics")
+
+    def test_cache_entry_count_drops(self):
+        """Process-wide cache: dedupe-on holds n_classes sfprog entries where
+        dedupe-off holds n_programs engine-keyed entries."""
+        cfg = get_config("grok-1-314b").reduced()
+        zf = zoo.build(cfg, batch=1, seq=8, reduced=False)
+
+        clear_executable_cache()
+        off = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune", disable=("dedupe",)))
+        off.run(off.traced.feeds(*zf.example_inputs))
+        n_off = len(executable_cache().keys())
+
+        clear_executable_cache()
+        on = repro.compile(zf.fn, zf.example_inputs,
+                           CompilerOptions(mode="kitsune"))
+        on.run(on.traced.feeds(*zf.example_inputs))
+        n_on = len(executable_cache().keys())
+
+        assert n_on < n_off
+        assert n_on == on.dedupe_stats()["n_classes"]
+
+    def test_dedupe_stats_surface(self):
+        zf = zoo.build("gemma3-1b", batch=1, seq=8)
+        app = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="kitsune"))
+        stats = app.dedupe_stats()
+        assert stats["n_programs"] >= stats["n_classes"] >= 1
+        assert 0.0 <= stats["hit_rate"] < 1.0
+        assert "->" in app.dedupe.summary()
+
+    def test_vertical_mode_skips(self):
+        zf = zoo.build("gemma3-1b", batch=1, seq=8)
+        app = repro.compile(zf.fn, zf.example_inputs,
+                            CompilerOptions(mode="vertical"))
+        assert app.dedupe is None  # one whole-graph program: nothing to share
+        rec = {r.name: r for r in app.pass_records}
+        assert "dedupe" in rec
+
+
+# --------------------------------------------------------------------------
+# rolled scans
+# --------------------------------------------------------------------------
+
+def _scan_fn(x, w):
+    def body(h, _):
+        return jnp.tanh(h @ w), ()
+    h, _ = jax.lax.scan(body, x, None, length=5)
+    return h
+
+
+def _python_loop_fn(x, w):
+    h = x
+    for i in range(5):
+        h = jnp.tanh(h @ w) + float(i)  # body VARIES per step
+    return h
+
+
+class TestRolledScans:
+    def setup_method(self, method):
+        k = jax.random.split(jax.random.PRNGKey(0))
+        self.x = jax.random.normal(k[0], (4, 16), jnp.float32)
+        self.w = jax.random.normal(k[1], (16, 16), jnp.float32) * 0.3
+
+    def test_rolled_matches_unrolled_bitwise(self):
+        un = repro.compile(_scan_fn, (self.x, self.w),
+                           CompilerOptions(mode="kitsune"))
+        ro = repro.compile(_scan_fn, (self.x, self.w),
+                           CompilerOptions(mode="kitsune", roll_scans=True))
+        rolled = [n for n in ro.graph.topo() if n.attrs.get("rolled_scan")]
+        assert len(rolled) == 1 and rolled[0].attrs["length"] == 5
+        assert len(ro.graph.topo()) < len(un.graph.topo())
+        out_u = un.run(un.traced.feeds(self.x, self.w)).outputs
+        out_r = ro.run(ro.traced.feeds(self.x, self.w)).outputs
+        (ku,), (kr,) = sorted(out_u), sorted(out_r)
+        _bitwise_equal(out_u[ku], out_r[kr], "rolled vs unrolled")
+
+    def test_rolled_body_lowers_once(self):
+        clear_executable_cache()
+        ro = repro.compile(_scan_fn, (self.x, self.w),
+                           CompilerOptions(mode="kitsune", roll_scans=True))
+        before = lowering_count()
+        rep = ro.run(ro.traced.feeds(self.x, self.w))
+        compiles = lowering_count() - before
+        # the rolled node is ONE program -> one fresh lowering for it (plus
+        # at most the free in/out plumbing, which never compiles)
+        assert rep.cache_misses == compiles <= ro.dedupe_stats()["n_classes"]
+        assert ro.run(ro.traced.feeds(self.x, self.w)).cache_misses == 0
+
+    def test_python_loop_still_unrolls(self):
+        app = repro.compile(_python_loop_fn, (self.x, self.w),
+                            CompilerOptions(mode="kitsune", roll_scans=True))
+        assert not [n for n in app.graph.topo()
+                    if n.attrs.get("rolled_scan")]
+        # 5 distinct matmul+tanh+add steps survive in the graph
+        assert len([n for n in app.graph.topo() if n.kind == "matmul"]) == 5
+
+    def test_roll_scans_in_cache_key(self):
+        a = CompilerOptions(mode="kitsune")
+        b = CompilerOptions(mode="kitsune", roll_scans=True)
+        assert a.cache_key() != b.cache_key()
+
+    def test_trace_scales_o1_in_length(self):
+        def make(n):
+            def fn(x, w):
+                def body(h, _):
+                    return jnp.tanh(h @ w), ()
+                h, _ = jax.lax.scan(body, x, None, length=n)
+                return h
+            return fn
+        g8 = repro.trace(make(8), self.x, self.w, roll_scans=True).graph
+        g64 = repro.trace(make(64), self.x, self.w, roll_scans=True).graph
+        assert len(g8.topo()) == len(g64.topo())  # O(1) in scan length
