@@ -17,12 +17,18 @@ requests.  Compile time is excluded: each engine runs the workload once to
 warm the process-wide executable cache, then a FRESH engine instance is
 timed (steady-state serving, not cold start).
 
+The ``paged_attention`` section races the two paged tick data paths --
+gather (materialize a dense KV view per tick) vs block-table-native (the
+attention site reads page rows through the table) -- on the same stream,
+asserting bitwise-identical tokens and recording per-tick KV bytes moved
+(docs/SERVING.md "Tick data path"; gated by run.py ``check_paged_gate``).
+
 The ``chaos`` section replays the workload under a scripted multi-site
 fault schedule (docs/SERVING.md "Failure model") and asserts the
 fault-tolerance contract while measuring recovery time.
 
 Smoke mode (``benchmarks/run.py --smoke``) records the result under the
-``serve`` key of BENCH_smoke.json (schema 5).
+``serve`` key of BENCH_smoke.json (schema 7).
 """
 from __future__ import annotations
 
@@ -88,6 +94,60 @@ class _LegacyAdapter(ServingEngine):
 class _PagedAdapter(PagedServingEngine):
     def submit_any(self, rid, prompt):
         self.submit(prompt, rid=rid)
+
+
+def paged_attention_modes(cfg, params, *, n_requests: int = 8,
+                          max_len: int = 24, batch: int = 4,
+                          csv: bool = True) -> dict:
+    """Gather vs block-table-native tick data path on the SAME workload.
+
+    Both engines run identical request streams through identical paged
+    pools; the only difference is `ServeConfig.paged_attention`.  Tracked
+    claims (gated by run.py `check_paged_gate`, schema 7):
+      * every request's tokens are bitwise identical across the two modes
+        (the native path is the production default; gather is its
+        differential oracle),
+      * per-tick KV bytes moved drop by >= 2x (the analytic traffic model,
+        core/costmodel.paged_decode_traffic, fed the engine's ACTUAL
+        block-table occupancy each tick),
+      * native wall-clock does not exceed gather beyond noise tolerance.
+    """
+    prompts = _prompts(n_requests)
+
+    def make(mode):
+        return _PagedAdapter(
+            cfg, params,
+            ServeConfig(max_len=max_len, batch=batch, prefill_chunk=4,
+                        paged_attention=mode),
+            eos_id=-1)
+
+    out = {}
+    done = {}
+    for mode in ("gather", "native"):
+        r = _run_engine(lambda: make(mode), prompts)
+        probe = make(mode)
+        for rid, p in prompts.items():
+            probe.submit_any(rid, p)
+        probe.run_until_done()
+        tr = probe.stats()["kv_traffic"]
+        r["kv_bytes_per_tick"] = tr[f"{mode}_bytes_per_tick"]
+        r["kv_traffic"] = tr
+        done[mode] = dict(probe.done)
+        out[mode] = r
+
+    out["bitwise_equal"] = done["gather"] == done["native"]
+    out["bytes_reduction"] = (out["gather"]["kv_bytes_per_tick"]
+                              / max(out["native"]["kv_bytes_per_tick"], 1))
+    if csv:
+        for mode in ("gather", "native"):
+            r = out[mode]
+            us = r["wall_s"] / max(r["tokens"], 1) * 1e6
+            print(f"serve_paged_{mode},{us:.1f},"
+                  f"tok_s={r['tok_s']:.1f} ticks={r['ticks']} "
+                  f"kv_bytes_per_tick={r['kv_bytes_per_tick']:.0f}")
+        print(f"serve_paged_kv_reduction,,{out['bytes_reduction']:.2f}x "
+              f"bitwise={out['bitwise_equal']}")
+    return out
 
 
 def chaos(cfg, params, *, n_requests: int = 8, max_len: int = 24,
@@ -210,6 +270,9 @@ def main(csv: bool = True, n_requests: int = 8, max_len: int = 24,
     out = {"legacy": legacy, "paged": paged,
            "speedup": paged["tok_s"] / legacy["tok_s"],
            "more_concurrency": paged["peak_active"] > legacy["slots"],
+           "paged_attention": paged_attention_modes(
+               cfg, params, n_requests=n_requests, max_len=max_len,
+               batch=2 * batch, csv=csv),
            "chaos": chaos(cfg, params, n_requests=n_requests,
                           max_len=max_len, batch=2 * batch, csv=csv)}
     if csv:

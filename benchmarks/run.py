@@ -11,7 +11,11 @@ guarantee this); violations print a diff table and exit nonzero.  Since
 schema 6 it also gates structural dedupe: repeated-layer / microbatch
 workloads must compile exactly ONE executable per unique program structure
 (bench_e2e.dedupe_smoke + check_dedupe_gate), bitwise-equal to the
-dedupe-off compile."""
+dedupe-off compile.  Since schema 7 it also gates the paged-attention tick
+data path: the block-table-native mode must stay bitwise-equal to its
+gather oracle, move <= half the gather path's per-tick KV bytes, and run
+no slower than gather beyond tolerance (bench_serve.paged_attention_modes
++ check_paged_gate; bytes table in the BENCH_paged.md artifact)."""
 from __future__ import annotations
 
 import json
@@ -50,6 +54,56 @@ def check_lowering_regressions(apps_measured: dict,
             violations.append(entry)
     return {"violations": violations, "table": table,
             "rel_tol": rel_tol, "abs_tol_us": abs_tol_us}
+
+
+def check_paged_gate(pa: dict, rel_tol: float = LOWERING_REL_TOL,
+                     abs_tol_us: float = LOWERING_ABS_TOL_US) -> dict:
+    """Paged-attention tick-data-path gate over `bench_serve.
+    paged_attention_modes` rows (schema 7).
+
+    Violations: (a) the two modes' tokens are not bitwise identical (the
+    native path diverged from its gather oracle), (b) native moves more
+    than HALF the gather path's per-tick KV bytes (the >= 2x traffic
+    reduction the block-table-native kernel exists to deliver), or (c)
+    native per-token wall-clock exceeds gather beyond the same noise
+    tolerance the lowering gate uses."""
+    g, n = pa["gather"], pa["native"]
+    g_us = g["wall_s"] / max(g["tokens"], 1) * 1e6
+    n_us = n["wall_s"] / max(n["tokens"], 1) * 1e6
+    limit_us = g_us * (1.0 + rel_tol) + abs_tol_us
+    checks = [
+        {"check": "bitwise_equal", "ok": bool(pa["bitwise_equal"]),
+         "detail": f"bitwise={pa['bitwise_equal']}"},
+        {"check": "kv_bytes_2x", "ok": 2 * n["kv_bytes_per_tick"]
+                                       <= g["kv_bytes_per_tick"],
+         "detail": f"native={n['kv_bytes_per_tick']:.0f}B/tick "
+                   f"gather={g['kv_bytes_per_tick']:.0f}B/tick "
+                   f"reduction={pa['bytes_reduction']:.2f}x"},
+        {"check": "wall_clock", "ok": n_us <= limit_us,
+         "detail": f"native={n_us:.1f}us/tok gather={g_us:.1f}us/tok "
+                   f"limit={limit_us:.1f}us/tok"},
+    ]
+    return {"violations": [c for c in checks if not c["ok"]],
+            "table": checks, "rel_tol": rel_tol, "abs_tol_us": abs_tol_us}
+
+
+def _paged_table_md(pa: dict, check: dict) -> str:
+    """Markdown bytes-moved table (BENCH_paged.md CI artifact)."""
+    lines = ["# Paged-attention tick data path (smoke run)", "",
+             "| mode | tok/s | ticks | KV bytes/tick | us/token |",
+             "|---|---|---|---|---|"]
+    for mode in ("gather", "native"):
+        r = pa[mode]
+        us = r["wall_s"] / max(r["tokens"], 1) * 1e6
+        lines.append(f"| {mode} | {r['tok_s']:.1f} | {r['ticks']} "
+                     f"| {r['kv_bytes_per_tick']:.0f} | {us:.1f} |")
+    lines += ["", f"KV bytes reduction: **{pa['bytes_reduction']:.2f}x** "
+                  f"(gate: >= 2x); bitwise equal: "
+                  f"**{pa['bitwise_equal']}**", "", "## Gate", ""]
+    for c in check["table"]:
+        lines.append(f"- {'ok' if c['ok'] else 'VIOLATION'} "
+                     f"`{c['check']}`: {c['detail']}")
+    return "\n".join(lines) + "\n"
 
 
 def check_dedupe_gate(dedupe_rows: dict) -> dict:
@@ -149,9 +203,10 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     dedupe = bench_e2e.dedupe_smoke(csv=False)
     check = check_lowering_regressions(apps_measured)
     dedupe_check = check_dedupe_gate(dedupe)
+    paged_check = check_paged_gate(serve["paged_attention"])
     calibration = bench_e2e.calibration_from_measured(apps_measured)
     results = {
-        "schema": 6,
+        "schema": 7,
         "kind": "smoke",
         "unix_time": time.time(),
         "wall_s": time.time() - t0,
@@ -168,6 +223,7 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
         "lowering_check": check,
         "dedupe": dedupe,
         "dedupe_check": dedupe_check,
+        "paged_check": paged_check,
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -175,6 +231,9 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
     verdict_path = stem.replace("_smoke", "") + "_verdicts.md"
     with open(verdict_path, "w") as f:
         f.write(_verdict_table_md(apps_measured))
+    paged_path = stem.replace("_smoke", "") + "_paged.md"
+    with open(paged_path, "w") as f:
+        f.write(_paged_table_md(serve["paged_attention"], paged_check))
     train_red = {n: round(r["traffic_reduction"], 2)
                  for n, r in apps_train.items()}
     print(f"# smoke results -> {out_path} "
@@ -183,8 +242,15 @@ def smoke(out_path: str = "BENCH_smoke.json") -> dict:
           f"dispatch_overhead_speedup={dispatch['overhead_speedup']:.1f}x, "
           f"serve_paged={serve['paged']['tok_s']:.0f}tok/s "
           f"{serve['speedup']:.2f}x legacy, "
+          f"kv_bytes_red={serve['paged_attention']['bytes_reduction']:.2f}x, "
           f"chaos_recovery={serve['chaos']['recovery_ticks_mean']:.1f}ticks "
           f"failed={serve['chaos']['failed']})")
+    print(f"# paged table -> {paged_path}")
+    print("# paged-attention gate (native bitwise, >=2x KV bytes, "
+          "no slower):")
+    for c in paged_check["table"]:
+        mark = "ok " if c["ok"] else "VIOLATION"
+        print(f"#   {mark} {c['check']}: {c['detail']}")
     print(f"# verdict table -> {verdict_path} "
           f"(calibrated eff={calibration['eff']:.2e}, "
           f"launch_s={calibration['launch_s']:.2e})")
@@ -225,6 +291,14 @@ def main() -> None:
                 print(f"#   {e['case']}: exes={e['executables_on']} "
                       f"classes={e['n_classes']} programs={e['n_programs']} "
                       f"bitwise={e['bitwise_equal']}")
+            sys.exit(1)
+        paged_violations = results["paged_check"]["violations"]
+        if paged_violations:
+            print("# PAGED-ATTENTION VIOLATIONS (native diverged from the "
+                  "gather oracle, moved > half the gather KV bytes, or ran "
+                  "slower beyond tolerance):")
+            for c in paged_violations:
+                print(f"#   {c['check']}: {c['detail']}")
             sys.exit(1)
         return
     from . import (bench_coverage, bench_dispatch, bench_e2e, bench_kernels,

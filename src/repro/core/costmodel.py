@@ -194,6 +194,40 @@ def cost_kernel_site(g: Graph, members: list[str], hw: HwSpec) -> SubgraphCost:
     return SubgraphCost("kernel", t, ext, 0.0)
 
 
+def paged_decode_traffic(*, batch: int, v_blocks: int, block_size: int,
+                         n_steps: int, row_bytes: int, n_sites: int,
+                         alloc_blocks: int | None = None) -> dict:
+    """Per-tick KV bytes moved by the two paged-attention tick data paths
+    (serve/engine.paged_tick; docs/SERVING.md "Tick data path").
+
+    `row_bytes`: bytes of ONE pool row at ONE attention site (Hkv * D *
+    itemsize); the returned totals cover both K and V across all `n_sites`
+    (= groups * attn-layers-per-group) sites.
+
+    gather: the pool->view materialization (read B*L rows, write B*L rows)
+    happens once per tick, every decode step re-reads the dense view, and
+    the trailing scatter reads the written columns and writes them back to
+    their pages.
+    native: every decode step reads only the table-resolved pages
+    (`alloc_blocks` across the batch -- repeated null-page references beyond
+    a slot's allocation are fetched once by the kernel's BlockSpec revisit,
+    so they don't scale the traffic), and each step writes B rows straight
+    to the pool.  This is the priced form of the lowering verdict for
+    `paged_decode` sites: the native kernel's external bytes are
+    O(allocated), not O(view).
+    """
+    view_rows = batch * v_blocks * block_size
+    if alloc_blocks is None:
+        alloc_blocks = batch * v_blocks
+    alloc_rows = alloc_blocks * block_size
+    writes = batch * n_steps
+    gather_rows = 2 * view_rows + n_steps * view_rows + 2 * writes
+    native_rows = n_steps * alloc_rows + writes
+    # x2: K and V pools
+    return {"gather_bytes": 2 * n_sites * row_bytes * gather_rows,
+            "native_bytes": 2 * n_sites * row_bytes * native_rows}
+
+
 def calibrate(hw: HwSpec, samples) -> HwSpec:
     """Fit `eff` and `launch_s` to MEASURED wall-clock so the roofline
     estimates stop disagreeing with reality on the active platform.

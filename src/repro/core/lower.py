@@ -316,6 +316,17 @@ def _atomic_swiglu_bwd_call(inputs: list[str], act: str, cfg) -> Callable:
     return call
 
 
+def _paged_decode_call(inputs: list[str], block_size: int, cfg) -> Callable:
+    q, kp, vp, tbl, vl = inputs
+
+    def call(vals, params):
+        from repro.kernels import paged_decode_attention
+        return paged_decode_attention(vals[q], vals[kp], vals[vp], vals[tbl],
+                                      valid_len=vals[vl],
+                                      block_size=block_size, cfg=cfg)
+    return call
+
+
 def _queue_reduce_call(partial: Node, cfg) -> Callable:
     x_name = partial.inputs[0]
 
@@ -369,6 +380,21 @@ def _try_hinted_atomic(g: Graph, n: Node, mset: set[str], taken: set[str],
         note(n.name, "atomic attention: recompute/jnp closure path "
                      "(window is a runtime operand; no backward kernel yet)")
         return None
+    if family == "paged_decode":
+        # block-table-native decode: operands are (q, kp, vp, tables, valid)
+        # and block_size is the hint's only static -- no act/rank gating,
+        # the pools are flat row pools, not activations
+        if len(n.inputs) != 5:
+            note(n.name, f"paged_decode: expected 5 operands, "
+                         f"got {len(n.inputs)}")
+            return None
+
+        def make_paged(c):
+            return _paged_decode_call(list(n.inputs),
+                                      int(meta["block_size"]), c)
+
+        return KernelMatch("paged_decode", (n.name,), n.name, dict(meta),
+                           _call=make_paged(cfg), _factory=make_paged)
     spec = _HINTED_KERNELS.get(family)
     if spec is None:
         note(n.name, f"unknown lower hint {family!r}")
@@ -719,6 +745,12 @@ def _tile_grid(g: Graph, km: KernelMatch) -> list[dict]:
     if km.kernel == "flash_decode":
         k = g.nodes[g.nodes[km.ops[0]].inputs[1]].out.shape
         return fa.decode_tile_candidates(k[2])
+    if km.kernel == "paged_decode":
+        # split-K length comes off the block table, not the pool: every
+        # chunk must cover whole pages, so candidates are page multiples
+        tb = g.nodes[g.nodes[km.ops[0]].inputs[3]].out.shape
+        bs = int(km.meta["block_size"])
+        return fa.decode_tile_candidates(tb[1] * bs, page_size=bs)
     if km.kernel == "queue_reduce":
         rest = g.nodes[km.ops[0]].out.shape[1:]
         rows = int(np.prod(rest[:-1])) if len(rest) > 1 else 1

@@ -37,8 +37,34 @@ def tile_candidates(sq: int, skv: int) -> list[dict]:
     return cands
 
 
-def decode_tile_candidates(s_len: int) -> list[dict]:
-    """Autotune grid for flash_decode's split-K chunk size."""
+def page_block_s(s_len: int, page_size: int, block_s: int | None) -> int:
+    """Align a split-K chunk size to page boundaries: the largest multiple of
+    `page_size` that is <= min(block_s or 256, s_len) and divides `s_len`
+    exactly (s_len is always a whole number of pages, so this terminates at
+    `page_size`).  paged_flash_decode programs own whole pages."""
+    want = block_s if block_s is not None else 256
+    want = max(page_size, (min(want, s_len) // page_size) * page_size)
+    while s_len % want:
+        want -= page_size
+    return want
+
+
+def decode_tile_candidates(s_len: int,
+                           page_size: int | None = None) -> list[dict]:
+    """Autotune grid for the decode split-K chunk size.
+
+    With `page_size` (the paged kernel), every candidate is a whole number
+    of pages -- `block_s` doubles as pages-per-program (`block_s //
+    page_size`), so the grid sweeps 1, 2, 4, ... pages per split-K chunk.
+    """
+    if page_size is not None:
+        cands = [{"block_s": m * page_size}
+                 for m in (1, 2, 4, 8, 16, 32, 64)
+                 if m * page_size <= s_len and s_len % (m * page_size) == 0]
+        default = {"block_s": page_block_s(s_len, page_size, None)}
+        if default not in cands:
+            cands.append(default)
+        return cands
     bss = [bs for bs in (128, 256, 512) if s_len % bs == 0]
     default = {"block_s": min(256, s_len)}
     cands = [{"block_s": bs} for bs in bss]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import combine_partials, flash_attention, flash_decode
+from .paged_attention import paged_flash_decode
 from .fused_mlp import (fused_mlp_bwd, fused_mlp_fwd, fused_mlp_swiglu_bwd,
                         fused_mlp_swiglu_fwd)
 from .queue_reduce import queue_reduce
@@ -182,6 +183,21 @@ def decode_attention(q, k, v, *, valid_len=None,
         return flash_decode(q, k, v, valid_len=valid_len,
                             block_s=cfg.block_s, interpret=cfg.interpret)
     return ref.decode_ref(q, k, v, valid_len=valid_len)
+
+
+def paged_decode_attention(q, kp, vp, tables, *, valid_len, block_size: int,
+                           layer=None, cfg: KernelConfig = KernelConfig()):
+    """Decode attention straight out of the flat page pools (no dense-view
+    gather): kp/vp (P, Hkv, D) or (P, G, A, Hkv, D) + layer=(g, a), tables
+    (B, V), valid_len (B,).  The Pallas path resolves pages through the
+    block table inside the kernel's index_map."""
+    if cfg.use_pallas:
+        return paged_flash_decode(q, kp, vp, tables, valid_len=valid_len,
+                                  block_size=block_size, layer=layer,
+                                  block_s=cfg.block_s,
+                                  interpret=cfg.interpret)
+    return ref.paged_decode_ref(q, kp, vp, tables, valid_len=valid_len,
+                                block_size=block_size, layer=layer)
 
 
 # ---------------------------------------------------------------------------

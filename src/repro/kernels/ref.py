@@ -147,6 +147,38 @@ def decode_ref(q, k, v, *, valid_len=None, scale=None):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_rows(tables, block_size: int):
+    """(B, V) block table -> (B, V*block_size) flat pool-row ids: the logical
+    dense-view address map.  Row 0 is the engine's reserved null page, so
+    table entries beyond a slot's allocation alias it."""
+    b, vb = tables.shape
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    return (tables.astype(jnp.int32)[:, :, None] * block_size
+            + offs[None, None, :]).reshape(b, vb * block_size)
+
+
+def paged_decode_ref(q, kp, vp, tables, *, valid_len, block_size: int,
+                     layer=None, scale=None):
+    """Oracle for paged_flash_decode: gather the dense view through the
+    block table, then run `decode_ref`'s exact math -- bitwise-equal to
+    gathering by hand because gathers are bit-preserving.
+
+    kp/vp: (P, Hkv, D) single-site pools, or (P, G, A, Hkv, D) full pools
+    with `layer=(g, a)`.
+    """
+    rows = paged_rows(tables, block_size)
+    if kp.ndim == 5:
+        g_i, a_i = layer
+        k = kp[rows, g_i, a_i]
+        v = vp[rows, g_i, a_i]
+    else:
+        k = kp[rows]
+        v = vp[rows]
+    k = k.transpose(0, 2, 1, 3)          # (B, Hkv, L, D)
+    v = v.transpose(0, 2, 1, 3)
+    return decode_ref(q, k, v, valid_len=valid_len, scale=scale)
+
+
 def reduce_ref(x, op: str = "sum"):
     f = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
     return f(x.astype(jnp.float32), axis=0).astype(x.dtype)

@@ -32,7 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.trace import atomic_vjp, attention_flops
+from repro.core.trace import atomic, atomic_vjp, attention_flops
 from repro.kernels import ref
 from . import encdec, layers, lm
 
@@ -77,6 +77,35 @@ def swiglu_atom(act: str = "silu"):
     return atomic_vjp(fwd, bwd, "matmul", name=f"swiglu_{act}",
                       lower=("swiglu_fwd", ("act", act)),
                       bwd_lower=("swiglu_bwd", ("act", act)))
+
+
+# ---------------------------------------------------------------------------
+# paged decode atom (inference-only, no backward)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def paged_decode_atom(block_size: int):
+    """(q, kp, vp, tables, valid) -> block-table-native decode attention.
+
+    Inference-only atomic over the FLAT page pools: `kp`/`vp` are
+    (pages*block_size, n_kv, d) row pools, `tables` is the (batch, v_blocks)
+    per-slot block table and `valid` the per-slot live lengths.  The forward
+    impl is the gather oracle (`ref.paged_decode_ref`); the `lower=` hint
+    binds the node to the real split-K Pallas kernel
+    (`kernels.paged_flash_decode`), which resolves `tables[b, c]` inside the
+    index_map and never materializes the gathered view."""
+    def fwd(q, kp, vp, tables, valid):
+        return ref.paged_decode_ref(q, kp, vp, tables, valid_len=valid,
+                                    block_size=block_size)
+
+    def flops(in_avals, out_avals):
+        b, hq, _, d = in_avals[0].shape
+        s = in_avals[3].shape[1] * block_size  # v_blocks * page rows
+        return 4.0 * b * hq * s * d
+
+    return atomic(fwd, "attention", flops=flops,
+                  name=f"paged_decode_b{block_size}",
+                  lower=("paged_decode", ("block_size", block_size)))
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import KernelConfig, attention as k_attention, \
-    decode_attention as k_decode, mlp as k_mlp, mlp_swiglu as k_mlp_swiglu
+    decode_attention as k_decode, mlp as k_mlp, mlp_swiglu as k_mlp_swiglu, \
+    paged_decode_attention as k_paged_decode
 from repro.kernels.flash_attention import combine_partials
+from repro.kernels.ref import paged_rows
 
 Params = dict
 
@@ -182,26 +184,90 @@ def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
     if kernels.use_pallas and isinstance(window, type(None)):
         o = k_decode(qh, ck, cv, valid_len=valid, cfg=kernels)
     else:
-        # grouped GQA: never materialize K/V repeated to n_heads
-        s_max = ck.shape[2]
-        grp = n_heads // n_kv
-        qg = qh.reshape(b, n_kv, grp, head_dim)
-        ki = jnp.arange(s_max)
-        if per_slot:
-            maskv = ((ki[None, :] < jnp.asarray(valid)[:, None])
-                     & (ki[None, :] >= jnp.asarray(lo)[..., None]))
-            maskv = maskv[:, None, None, :]
-        else:
-            maskv = ((ki < valid) & (ki >= lo))[None, None, None, :]
-        sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
-                        ck.astype(jnp.float32)) * (head_dim ** -0.5)
-        sc = jnp.where(maskv, sc, -1e30)
-        pr = jax.nn.softmax(sc, axis=-1)
-        o = jnp.einsum("bhgs,bhsd->bhgd", pr,
-                       cv.astype(jnp.float32)).astype(x.dtype)
-        o = o.reshape(b, n_heads, 1, head_dim)
+        o = _grouped_decode(qh, ck, cv, valid, lo, n_heads=n_heads,
+                            n_kv=n_kv, head_dim=head_dim, per_slot=per_slot,
+                            out_dtype=x.dtype)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * head_dim)
     return constrain(o @ p["wo"], "act_resid"), ck, cv
+
+
+def _grouped_decode(qh, ck, cv, valid, lo, *, n_heads, n_kv, head_dim,
+                    per_slot, out_dtype):
+    """Grouped-GQA XLA decode: never materializes K/V repeated to n_heads.
+
+    The ONE masked-softmax decode path shared by `attention_decode` and
+    `attention_decode_paged` -- running literally the same ops on views that
+    are gathered bit-identically is what makes the serving engine's
+    gather/native paged-attention modes bitwise-equal.
+    qh: (B, Hq, 1, D); ck/cv: (B, Hkv, S, D).  Returns (B, Hq, 1, D)."""
+    b = qh.shape[0]
+    s_max = ck.shape[2]
+    grp = n_heads // n_kv
+    qg = qh.reshape(b, n_kv, grp, head_dim)
+    ki = jnp.arange(s_max)
+    if per_slot:
+        maskv = ((ki[None, :] < jnp.asarray(valid)[:, None])
+                 & (ki[None, :] >= jnp.asarray(lo)[..., None]))
+        maskv = maskv[:, None, None, :]
+    else:
+        maskv = ((ki < valid) & (ki >= lo))[None, None, None, :]
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                    ck.astype(jnp.float32)) * (head_dim ** -0.5)
+    sc = jnp.where(maskv, sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", pr,
+                   cv.astype(jnp.float32)).astype(out_dtype)
+    return o.reshape(b, n_heads, 1, head_dim)
+
+
+def attention_decode_paged(p: Params, x: jax.Array, kp: jax.Array,
+                           vp: jax.Array, tables: jax.Array, pos: jax.Array,
+                           write_rows: jax.Array, *, layer, block_size: int,
+                           n_heads: int, n_kv: int, head_dim: int,
+                           theta: float | jax.Array = 1e4,
+                           window: int | jax.Array | None = None,
+                           kernels: KernelConfig = KernelConfig(),
+                           constrain=lambda t, _: t):
+    """Block-table-native decode: K/V live in the flat page pools the whole
+    time -- no dense-view copy in, no scatter back out.
+
+    kp/vp: (P, G, A, Hkv, D) page pools; `layer=(g, a)` selects this
+    attention site (g may be a traced scan index).  tables: (B, V) physical
+    page ids.  pos: (B,) per-slot position clock.  write_rows: (B,)
+    precomputed flat pool row for each slot's new K/V (the engine redirects
+    masked/inactive slots to the reserved null row 0, mirroring the gather
+    path's scatter).  Returns (out, kp, vp) with this site's rows updated
+    in place -- write-then-attend, so a slot sees its own new token exactly
+    as the gather path's dynamic_update_slice view does.
+    """
+    b, one, d_model = x.shape
+    g_i, a_i = layer
+    positions = jnp.asarray(pos, jnp.int32)[:, None]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           constrain)
+    kp = kp.at[write_rows, g_i, a_i].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[write_rows, g_i, a_i].set(v[:, 0].astype(vp.dtype))
+    qh = q.transpose(0, 2, 1, 3)
+    valid = pos + 1
+    lo = jnp.maximum(0, valid - window) if window is not None else 0
+    static_site = isinstance(g_i, int) and isinstance(a_i, int)
+    if kernels.use_pallas and window is None and static_site:
+        o = k_paged_decode(qh, kp, vp, tables, valid_len=valid,
+                           block_size=block_size, layer=(g_i, a_i),
+                           cfg=kernels)
+    else:
+        # XLA path: gather this site's view through the table (bit-identical
+        # rows to the gather mode's pool->view copy) and run the shared
+        # grouped math.  Traffic is per-site O(view) here, but the pool->view
+        # materialization and the trailing scatter are still gone.
+        rows = paged_rows(tables, block_size)
+        ck = kp[rows, g_i, a_i].transpose(0, 2, 1, 3)
+        cv = vp[rows, g_i, a_i].transpose(0, 2, 1, 3)
+        o = _grouped_decode(qh, ck, cv, valid, lo, n_heads=n_heads,
+                            n_kv=n_kv, head_dim=head_dim, per_slot=True,
+                            out_dtype=x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * head_dim)
+    return constrain(o @ p["wo"], "act_resid"), kp, vp
 
 
 # ---------------------------------------------------------------------------

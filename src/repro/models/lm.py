@@ -340,17 +340,36 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 def decode_step(params: dict, token: jax.Array, pos: jax.Array, cache: dict,
                 cfg: ArchConfig, *, kernels: KernelConfig = KernelConfig(),
-                sharder=NULL, moe_cf: float = 1.25) -> tuple[jax.Array, dict]:
+                sharder=NULL, moe_cf: float = 1.25,
+                block_tables: jax.Array | None = None,
+                block_size: int | None = None,
+                kv_write_rows: jax.Array | None = None) -> tuple[jax.Array, dict]:
     """token: (B,) int32; pos: scalar int32 (current position) or a
     per-slot (B,) int32 vector (paged serving: each slot writes and attends
     at its OWN position -- see layers.attention_decode).
-    Returns (logits (B, vocab), new_cache)."""
+    Returns (logits (B, vocab), new_cache).
+
+    Paged-native mode: when `cache` holds the flat page pools ("kp"/"vp",
+    shape (P, G, A, Hkv, D)) instead of dense views ("k"/"v"), attention
+    reads/writes the pools through `block_tables` (B, V) directly
+    (layers.attention_decode_paged) -- no dense view exists.  The pools ride
+    the scan CARRY (they have no leading group axis; each site addresses its
+    (g, a) plane), and `kv_write_rows` (B,) is the engine-precomputed flat
+    pool row for each slot's new K/V."""
     x = L.embed(params["embed"], token[:, None], scale=True).astype(
         params["embed"].dtype)
     kinds = _sub_kinds(cfg)
     sched = layer_schedule(cfg)
+    paged = "kp" in cache
+    if paged:
+        assert block_tables is not None and block_size is not None \
+            and kv_write_rows is not None
 
-    def group_fn(x, group):
+    def group_fn(carry, group):
+        if paged:
+            x, kp, vp = carry
+        else:
+            x = carry
         gp = group["p"]
         new = dict(group)
         attn_i = 0
@@ -362,13 +381,22 @@ def decode_step(params: dict, token: jax.Array, pos: jax.Array, cache: dict,
             theta = group["theta"][i]
             if kind in ("dense", "moe", "hybrid"):
                 h = L.rms_norm(x, p["ln1"])
-                a, ck, cv = L.attention_decode(
-                    p["attn"], h, group["k"][attn_i], group["v"][attn_i], pos,
-                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
-                    head_dim=cfg.head_dim, theta=theta, window=win,
-                    kernels=kernels, constrain=sharder.constrain)
-                new["k"] = new["k"].at[attn_i].set(ck)
-                new["v"] = new["v"].at[attn_i].set(cv)
+                if paged:
+                    a, kp, vp = L.attention_decode_paged(
+                        p["attn"], h, kp, vp, block_tables, pos,
+                        kv_write_rows, layer=(group["g"], attn_i),
+                        block_size=block_size, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                        theta=theta, window=win, kernels=kernels,
+                        constrain=sharder.constrain)
+                else:
+                    a, ck, cv = L.attention_decode(
+                        p["attn"], h, group["k"][attn_i], group["v"][attn_i],
+                        pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim, theta=theta, window=win,
+                        kernels=kernels, constrain=sharder.constrain)
+                    new["k"] = new["k"].at[attn_i].set(ck)
+                    new["v"] = new["v"].at[attn_i].set(cv)
                 attn_i += 1
                 if kind == "hybrid":
                     hs = L.rms_norm(x, p["ln_ssm"])
@@ -411,11 +439,22 @@ def decode_step(params: dict, token: jax.Array, pos: jax.Array, cache: dict,
         new.pop("p")
         new.pop("window")
         new.pop("theta")
+        if paged:
+            new.pop("g")
+            return (x, kp, vp), new
         return x, new
 
     xs = {"p": params["blocks"], "window": sched["window"],
-          "theta": sched["theta"], **cache}
-    x, new_cache = _scan(group_fn, x, xs)
+          "theta": sched["theta"],
+          **{k: v for k, v in cache.items() if k not in ("kp", "vp")}}
+    if paged:
+        xs["g"] = jnp.arange(_n_groups(cfg), dtype=jnp.int32)
+        (x, kp_new, vp_new), new_cache = _scan(
+            group_fn, (x, cache["kp"], cache["vp"]), xs)
+        new_cache["kp"] = kp_new
+        new_cache["vp"] = vp_new
+    else:
+        x, new_cache = _scan(group_fn, x, xs)
     x = L.rms_norm(x, params["final_norm"])
     table = params.get("unembed", params["embed"])
     logits = (x @ table.T)[:, 0]

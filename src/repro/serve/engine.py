@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.compiler import cached_jit
+from repro.core.costmodel import paged_decode_traffic
 from repro.core.executor import executable_cache
 from repro.distributed.sharding import NULL
 from repro.kernels import KernelConfig
@@ -86,10 +87,18 @@ class ServeConfig:
     # reduces over the same attention length, which keeps outputs BITWISE
     # independent of what the other slots are doing (XLA regroups reduction
     # trees per length, so varying view lengths are value-equal but can flip
-    # a near-tie argmax).  True buckets the view at pow2 block counts: less
-    # wasted gather/attention work per tick, more compiled programs, and
-    # only value-level (not bitwise) batch invariance.
+    # a near-tie argmax).  True sizes the view at the ACTIVE-SLOT max (the
+    # longest live slot's block count, no padding tax): less gather and
+    # attention work per tick, more compiled programs (<= max_blocks per
+    # chunk width), and only value-level (not bitwise) batch invariance.
     view_buckets: bool = False
+    # Tick KV data path (docs/SERVING.md "Tick data path").  "native"
+    # (default): attention reads/writes the flat page pools through the
+    # block tables directly -- no pool->view gather, no trailing scatter.
+    # "gather": the PR-5 path (gather the dense view, flash-decode it,
+    # scatter written columns back), kept as the differential oracle; the
+    # two modes are bitwise-equal (tests/test_paged_attention.py).
+    paged_attention: str = "native"
     max_new_tokens: int | None = None    # default per-request cap
     # -- fault tolerance (docs/SERVING.md "Failure model") -----------------
     # Scripted fault schedule (tuple of faults.FaultSpec) + RNG seed: tests
@@ -307,11 +316,20 @@ _AUX_BATCH_AXIS = {"ssm": 1, "mC": 2, "mn": 2, "mm": 2,
 
 def paged_tick(params, state, cfg: ArchConfig, *,
                kernels: KernelConfig = KernelConfig(), sharder=NULL,
-               block_size: int, n_steps: int):
-    """One unified serving tick over paged KV: gather a dense per-slot view
-    from the page pool, run `n_steps` decode steps with per-slot activity
-    masks (chunked prefill and decode mixed in one program), scatter the
-    newly written positions back to their pages.
+               block_size: int, n_steps: int, mode: str = "gather"):
+    """One unified serving tick over paged KV: run `n_steps` decode steps
+    with per-slot activity masks (chunked prefill and decode mixed in one
+    program).  Two KV data paths (docs/SERVING.md "Tick data path"):
+
+    mode="gather" (the PR-5 oracle): gather a dense per-slot view from the
+    page pool, decode against the view, scatter the newly written positions
+    back to their pages -- a full O(view) pool copy per tick.
+    mode="native": attention indexes the pools through the block tables
+    directly (models decode in paged mode); new K/V land on their page rows
+    as they are produced, so the view materialization AND the trailing
+    scatter disappear.  Bitwise-equal to "gather": both paths run the same
+    grouped decode math over bit-identically gathered rows of the same
+    view length (tests/test_paged_attention.py).
 
     state:
       tokens (B, n_steps) int32  input token per slot per step (padded)
@@ -324,17 +342,23 @@ def paged_tick(params, state, cfg: ArchConfig, *,
 
     Bitwise contract: a slot's outputs depend only on ITS OWN fed tokens.
     Masked-out steps write at a stationary position that a later active step
-    either overwrites or the scatter skips; view positions beyond a slot's
-    valid length score exp(-1e30 - m) == 0.0 exactly in f32, so neither
-    other slots' activity nor the view padding perturbs a single bit.
+    either overwrites or that is redirected to the null page (native) /
+    skipped by the scatter (gather); view positions beyond a slot's valid
+    length score exp(-1e30 - m) == 0.0 exactly in f32, so neither other
+    slots' activity nor the view padding perturbs a single bit.
     """
     model = get_model(cfg)
     tokens, n_tok, pos = state["tokens"], state["n_tok"], state["pos"]
     b = tokens.shape[0]
     bs = block_size
     has_kv = "kp" in state
+    native = has_kv and mode == "native"
     cache: dict[str, Any] = {}
-    if has_kv:
+    if native:
+        kp, vp, tables = state["kp"], state["vp"], state["tables"]
+        v_blocks = tables.shape[1]
+        cache["kp"], cache["vp"] = kp, vp
+    elif has_kv:
         kp, vp, tables = state["kp"], state["vp"], state["tables"]
         v_blocks = tables.shape[1]
         view_len = v_blocks * bs
@@ -353,12 +377,26 @@ def paged_tick(params, state, cfg: ArchConfig, *,
     logits = None
     for j in range(n_steps):
         active = j < n_tok
-        lg, new = model.decode_step(params, tokens[:, j], pos, cache,
-                                    kernels=kernels, sharder=sharder)
-        if has_kv:
-            # inactive slots wrote garbage at their stationary pos: either a
-            # later active step overwrites it or the scatter below skips it
-            cache["k"], cache["v"] = new["k"], new["v"]
+        if native:
+            # flat pool row for each slot's new K/V; inactive slots redirect
+            # to the null page row 0 (same semantics as the gather path's
+            # scatter skipping invalid columns)
+            blk = jnp.minimum(pos // bs, v_blocks - 1)
+            phys_w = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+            write_rows = jnp.where(active, phys_w * bs + pos % bs, 0)
+            lg, new = model.decode_step(params, tokens[:, j], pos, cache,
+                                        kernels=kernels, sharder=sharder,
+                                        block_tables=tables, block_size=bs,
+                                        kv_write_rows=write_rows)
+            cache["kp"], cache["vp"] = new["kp"], new["vp"]
+        else:
+            lg, new = model.decode_step(params, tokens[:, j], pos, cache,
+                                        kernels=kernels, sharder=sharder)
+            if has_kv:
+                # inactive slots wrote garbage at their stationary pos:
+                # either a later active step overwrites it or the scatter
+                # below skips it
+                cache["k"], cache["v"] = new["k"], new["v"]
         for name, ax in _AUX_BATCH_AXIS.items():
             if name in cache:
                 shp = [1] * cache[name].ndim
@@ -371,7 +409,10 @@ def paged_tick(params, state, cfg: ArchConfig, *,
 
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = {"tokens_next": nxt, "logits": logits, "pos": pos}
-    if has_kv:
+    if native:
+        # K/V already live on their page rows -- no trailing scatter
+        out["kp"], out["vp"] = cache["kp"], cache["vp"]
+    elif has_kv:
         # scatter the C freshly written view columns back to their pages;
         # invalid (beyond n_tok) columns redirect to the null page row 0
         steps = jnp.arange(n_steps, dtype=pos0.dtype)
@@ -445,7 +486,8 @@ class PagedKVExecutor:
         sc = self.sc
         probe = functools.partial(paged_tick, cfg=self.cfg,
                                   kernels=self.kernels, sharder=self.sharder,
-                                  block_size=sc.block_size, n_steps=1)
+                                  block_size=sc.block_size, n_steps=1,
+                                  mode=sc.paged_attention)
         state = self._abstract_state(n_steps=1, v_blocks=1, num_blocks=1)
         p_abs = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
@@ -530,6 +572,9 @@ class PagedServingEngine:
         self.clock = clock               # injectable for deadline tests
         if cfg.family == "encdec":
             raise ValueError("paged serving covers decoder-only families")
+        if sc.paged_attention not in ("gather", "native"):
+            raise ValueError("paged_attention must be 'gather' or 'native', "
+                             f"got {sc.paged_attention!r}")
         _apply_cache_capacity(sc)
         self.injector = (FaultInjector(tuple(sc.fault_plan), sc.fault_seed)
                          if sc.fault_plan else None)
@@ -580,6 +625,10 @@ class PagedServingEngine:
         self.ticks = 0
         self.tokens_out = 0
         self.peak_active = 0
+        # analytic per-tick KV bytes for BOTH tick data paths, accumulated
+        # from each tick's actual geometry (costmodel.paged_decode_traffic)
+        # -- the bench's bytes-moved table reads these off stats()
+        self.kv_traffic = {"ticks": 0, "gather_bytes": 0, "native_bytes": 0}
         # -- health/degraded-mode state (health()) -------------------------
         self.state = "healthy"           # healthy | degraded | stopped
         self.last_error: EngineError | None = None
@@ -596,12 +645,13 @@ class PagedServingEngine:
             return [0]
         if not self.sc.view_buckets:
             return [self.max_blocks]
-        buckets, v = [], 1
-        while v < self.max_blocks:
-            buckets.append(v)
-            v *= 2
-        buckets.append(self.max_blocks)
-        return buckets
+        # exact active-max sizing: the view is as long as the longest active
+        # slot needs, nothing more (was pow2 buckets -- up to 2x padding).
+        # At most max_blocks compiled tick programs per chunk width, and the
+        # same bitwise trade as before: view length now varies with the
+        # batch mix, so outputs are value-equal but not bitwise
+        # batch-invariant (docs/SERVING.md "Tick data path").
+        return list(range(1, self.max_blocks + 1))
 
     def _view_for(self, need_blocks: int) -> int:
         for v in self._view_buckets:
@@ -618,7 +668,8 @@ class PagedServingEngine:
         sc = self.sc
         base = functools.partial(paged_tick, cfg=self.cfg,
                                  kernels=self.kernels, sharder=self.sharder,
-                                 block_size=sc.block_size, n_steps=n_steps)
+                                 block_size=sc.block_size, n_steps=n_steps,
+                                 mode=sc.paged_attention)
         # The tick state (kp/vp pools, aux, per-tick tokens/pos/tables) is
         # dead after every call -- the engine rebinds all of it from the
         # step's outputs -- so donate it: XLA aliases the KV pools and the
@@ -634,7 +685,8 @@ class PagedServingEngine:
             fn = cached_jit(
                 base,
                 key=("paged_tick", self.cfg.name, sc.batch, sc.block_size,
-                     n_steps, v_blocks, num, repr(self.kernels),
+                     n_steps, v_blocks, num, sc.paged_attention,
+                     repr(self.kernels),
                      str(getattr(self.sharder, "mesh", "null"))),
                 donate_argnums=(1,))
         self._steps[key] = fn
@@ -1075,6 +1127,20 @@ class PagedServingEngine:
         self.pos = np.asarray(out["pos"], np.int64).copy()
         self._progressed = True
 
+        if self.has_kv:
+            # analytic KV bytes for this tick's geometry, BOTH data paths
+            # (the gather/native comparison in bench_serve reads stats())
+            g_, a_, h_, d_ = self.executor.page_shape
+            tr = paged_decode_traffic(
+                batch=self.sc.batch, v_blocks=v_blocks,
+                block_size=self.sc.block_size, n_steps=c,
+                row_bytes=h_ * d_ * jnp.dtype(self.executor.kv_dtype).itemsize,
+                n_sites=g_ * a_,
+                alloc_blocks=int(np.count_nonzero(self.tables[:, :v_blocks])))
+            self.kv_traffic["ticks"] += 1
+            self.kv_traffic["gather_bytes"] += tr["gather_bytes"]
+            self.kv_traffic["native_bytes"] += tr["native_bytes"]
+
         # slots that finish prefill this tick sample their first/next token
         sampling = [i for i in active
                     if self.slots[i]["fed"] + n_tok[i]
@@ -1150,6 +1216,16 @@ class PagedServingEngine:
              "health": self.health()}
         if self.pool is not None:
             s["pool"] = self.pool.check()
+        if self.has_kv and self.kv_traffic["ticks"]:
+            n = self.kv_traffic["ticks"]
+            s["kv_traffic"] = {
+                "mode": self.sc.paged_attention,
+                "ticks": n,
+                "gather_bytes_per_tick": self.kv_traffic["gather_bytes"] / n,
+                "native_bytes_per_tick": self.kv_traffic["native_bytes"] / n,
+                "reduction": (self.kv_traffic["gather_bytes"]
+                              / max(self.kv_traffic["native_bytes"], 1)),
+            }
         if self.prefix_enabled:
             s["prefix_cache"] = self.prefix.stats()
         if self.injector is not None:
